@@ -1,0 +1,49 @@
+"""Benchmark: paper Table 8 — monthly GCS cost for configuration III."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.hcdc import HCDCScenario, PAPER_TABLE8, make_config
+from repro.sim.engine import DAY
+
+
+def run(n_runs: int = 1, days: int = 90,
+        n_files: int = 1_000_000) -> List[Dict]:
+    per: Dict[str, List[float]] = {}
+    wall = []
+    for seed in range(n_runs):
+        cfg = make_config("III", simulated_time=days * DAY,
+                          n_files_per_site=n_files, seed=11 + seed)
+        t0 = time.time()
+        m = HCDCScenario(cfg).run()
+        wall.append(time.time() - t0)
+        for k, v in m.items():
+            if k.endswith("_usd"):
+                per.setdefault(k, []).append(v)
+    rows = []
+    for k, ref in PAPER_TABLE8.items():
+        if k not in per:
+            continue
+        mean = float(np.mean(per[k]))
+        rows.append({
+            "name": f"table8.{k}",
+            "us_per_call": float(np.mean(wall)) * 1e6,
+            "derived": mean,
+            "paper": ref,
+            "diff_pct": 100.0 * (mean - ref) / ref,
+        })
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g},"
+              f"paper={r['paper']:.4g},diff={r['diff_pct']:+.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Benchmark: paper Tables 6 & 7 (+ Fig 6/8 curves) — HCDC configurations.
+
+Runs configurations I/II/III at full scale (90 days, 1e6 files/site) and
+prints jobs done, download volume (Table 6) and per-site transfer volumes
+(Table 7) against the paper's numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.hcdc import (
+    HCDCScenario,
+    PAPER_TABLE6,
+    PAPER_TABLE7,
+    make_config,
+)
+from repro.sim.engine import DAY
+from repro.sim.output import mean_and_error
+
+
+def run(n_runs: int = 1, days: int = 90, n_files: int = 1_000_000,
+        curves: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    for name in ("I", "II", "III"):
+        per: Dict[str, List[float]] = {}
+        wall = []
+        for seed in range(n_runs):
+            cfg = make_config(name, simulated_time=days * DAY,
+                              n_files_per_site=n_files, seed=11 + seed,
+                              curves=curves)
+            t0 = time.time()
+            m = HCDCScenario(cfg).run()
+            wall.append(time.time() - t0)
+            for k, v in m.items():
+                per.setdefault(k, []).append(v)
+        refs = {**PAPER_TABLE6.get(name, {}), **PAPER_TABLE7.get(name, {})}
+        for k in ("jobs_done", "download_pb", "Site-1.tape_to_disk_pb",
+                  "Site-2.tape_to_disk_pb", "gcs_to_disk_pb", "gcs_used_pb"):
+            if k not in per:
+                continue
+            mean, sd, se = mean_and_error(per[k])
+            ref = refs.get(k)
+            rows.append({
+                "name": f"cfg{name}.{k}",
+                "us_per_call": float(np.mean(wall)) * 1e6,
+                "derived": mean,
+                "paper": ref,
+                "diff_pct": (100.0 * (mean - ref) / ref) if ref else None,
+                "sd_pct": sd,
+            })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=1)
+    ap.add_argument("--days", type=int, default=90)
+    ap.add_argument("--files", type=int, default=1_000_000)
+    args = ap.parse_args()
+    for r in run(args.runs, args.days, args.files):
+        ref = f",paper={r['paper']:.4g},diff={r['diff_pct']:+.2f}%" \
+            if r["paper"] else ""
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g}{ref}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark: roofline table from the dry-run artifacts (results/dryrun).
+
+Reads every recorded cell JSON and prints the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and the roofline
+fraction. This is the §Roofline table generator for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(tag: str = "") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run() -> List[Dict]:
+    rows = []
+    for rec in load_cells():
+        if rec.get("status") != "ok":
+            rows.append({"name": f"dryrun.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+                         "us_per_call": 0.0,
+                         "derived": rec.get("status"),
+                         })
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "name": f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+            "us_per_call": max(r["compute_s"], r["memory_s"],
+                               r["collective_s"]) * 1e6,
+            "derived": r["roofline_fraction"],
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "useful": r["useful_flops_ratio"],
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    if not rows:
+        print("no dryrun artifacts found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    for r in rows:
+        extra = ""
+        if "dominant" in r:
+            extra = (f",dom={r['dominant']},c={r['compute_s']:.3f}s,"
+                     f"m={r['memory_s']:.3f}s,coll={r['collective_s']:.3f}s,"
+                     f"useful={r['useful']:.3f}")
+        d = r['derived']
+        d_str = f"{d:.4f}" if isinstance(d, float) else str(d)
+        print(f"{r['name']},{r['us_per_call']:.0f},{d_str}{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark: paper Table 2 — simulation correctness validation.
+
+Runs the §4.2 validation scenario (full 59d19h horizon by default) and
+prints every Table-2 metric against the paper's simulated values.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.validation import (
+    PAPER_TABLE2,
+    ValidationConfig,
+    ValidationScenario,
+)
+from repro.sim.engine import DAY, HOUR
+from repro.sim.output import mean_and_error
+
+
+def run(n_runs: int = 2, horizon_days: float = None) -> List[Dict]:
+    rows = []
+    per_run = {k: [] for k in PAPER_TABLE2}
+    wall = []
+    for seed in range(n_runs):
+        cfg = ValidationConfig(seed=seed)
+        if horizon_days is not None:
+            cfg.simulated_time = int(horizon_days * DAY)
+        t0 = time.time()
+        m = ValidationScenario(cfg).run()
+        wall.append(time.time() - t0)
+        for k in per_run:
+            per_run[k].append(m[k])
+    for k, ref in PAPER_TABLE2.items():
+        mean, sd, se = mean_and_error(per_run[k])
+        rows.append({
+            "name": f"table2.{k}",
+            "us_per_call": np.mean(wall) * 1e6,
+            "derived": mean,
+            "paper": ref,
+            "diff_pct": 100.0 * (mean - ref) / ref,
+            "sd_pct": sd,
+        })
+    return rows
+
+
+def main() -> None:
+    for r in run(n_runs=2):
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g},"
+              f"paper={r['paper']:.4g},diff={r['diff_pct']:+.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus per-row comparison
+columns where the paper provides reference values).
+
+  table2   bench_validation   (simulation correctness, 5 metrics)
+  table6/7 bench_hcdc         (jobs done, volumes for cfg I/II/III)
+  table8   bench_cost         (monthly GCS cost, cfg III)
+  hotloop  bench_tick_engine  (transfer-manager tick engines)
+  roofline bench_roofline     (dry-run roofline terms per cell)
+
+Env knobs: HCDC_RUNS (default 1), HCDC_DAYS (90), HCDC_FILES (1e6),
+VALIDATION_RUNS (2), FAST=1 (reduced scales for CI smoke).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    fast = os.environ.get("FAST", "0") == "1"
+    t0 = time.time()
+
+    from benchmarks import bench_validation
+    runs = int(os.environ.get("VALIDATION_RUNS", "1" if fast else "2"))
+    horizon = 2.0 if fast else None
+    for r in bench_validation.run(n_runs=runs, horizon_days=horizon):
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g},"
+              f"paper={r['paper']:.4g},diff={r['diff_pct']:+.2f}%", flush=True)
+
+    from benchmarks import bench_hcdc
+    hruns = int(os.environ.get("HCDC_RUNS", "1"))
+    days = int(os.environ.get("HCDC_DAYS", "5" if fast else "90"))
+    files = int(os.environ.get("HCDC_FILES",
+                               "50000" if fast else "1000000"))
+    for r in bench_hcdc.run(n_runs=hruns, days=days, n_files=files):
+        ref = (f",paper={r['paper']:.4g},diff={r['diff_pct']:+.2f}%"
+               if r.get("paper") else "")
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g}{ref}",
+              flush=True)
+
+    from benchmarks import bench_cost
+    for r in bench_cost.run(n_runs=hruns, days=days, n_files=files):
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g},"
+              f"paper={r['paper']:.4g},diff={r['diff_pct']:+.2f}%", flush=True)
+
+    from benchmarks import bench_tick_engine
+    for r in bench_tick_engine.run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.4g}",
+              flush=True)
+
+    from benchmarks import bench_roofline
+    rows = bench_roofline.run()
+    for r in rows:
+        extra = ""
+        if "dominant" in r:
+            extra = (f",dom={r['dominant']},c={r['compute_s']:.3f}s,"
+                     f"m={r['memory_s']:.3f}s,coll={r['collective_s']:.3f}s,"
+                     f"useful={r['useful']:.3f}")
+        d = r["derived"]
+        d_str = f"{d:.4f}" if isinstance(d, float) else str(d)
+        print(f"{r['name']},{r['us_per_call']:.0f},{d_str}{extra}", flush=True)
+
+    print(f"# total benchmark wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Generate EXPERIMENTS.md roofline/dry-run tables from results/dryrun."""
+
+import glob
+import json
+import os
+import sys
+
+RESULTS = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def main():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    base = [c for c in cells if not c.get("tag")]
+    print("### Dry-run grid (baseline)\n")
+    print("| arch | shape | mesh | status | compile s | temp GB | args GB |"
+          " plan |")
+    print("|---|---|---|---|---|---|---|---|")
+    for c in sorted(base, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if c["status"] == "ok":
+            m = c["memory"]
+            plan = c["plan"]
+            pl = (f"fsdp={'T' if plan['fsdp'] else 'F'},"
+                  f"micro={plan['microbatches']},{plan['optimizer']}")
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok | "
+                  f"{c['compile_s']} | {fmt_bytes(m['temp_bytes'])} | "
+                  f"{fmt_bytes(m['argument_bytes'])} | {pl} |")
+        else:
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                  f"{c['status']} | - | - | - | "
+                  f"{c.get('reason', c.get('error', ''))[:60]} |")
+
+    print("\n### Roofline terms (single-pod 16x16 baseline)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in sorted(base, key=lambda c: (c["arch"], c["shape"])):
+        if c["status"] != "ok" or c["mesh"] != "16x16":
+            continue
+        r = c["roofline"]
+        print(f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | "
+              f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+              f"{r['dominant'].replace('_s','')} | {r['model_flops']:.3e} | "
+              f"{r['useful_flops_ratio']:.3f} | "
+              f"{r['roofline_fraction']:.4f} |")
+
+    finals = [c for c in cells if c.get("tag") == "final"]
+    if finals:
+        print("\n### Roofline terms — FINAL optimized framework\n")
+        print("| arch | shape | mesh | compute s | memory s | collective s |"
+              " dominant | roofline frac | temp GB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for c in sorted(finals, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+            if c["status"] != "ok":
+                continue
+            r = c["roofline"]
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                  f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+                  f"{r['collective_s']:.4f} | {r['dominant'].replace('_s','')} | "
+                  f"{r['roofline_fraction']:.4f} | "
+                  f"{fmt_bytes(c['memory']['temp_bytes'])} |")
+
+    tags = sorted({c.get("tag") for c in cells if c.get("tag")} - {"final"})
+    if tags:
+        print("\n### Perf iterations\n")
+        print("| tag | arch | shape | compute s | memory s | collective s |"
+              " dominant | roofline frac | temp GB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for c in sorted(cells, key=lambda c: (c.get("tag", ""), c["arch"])):
+            if not c.get("tag") or c.get("tag") == "final" or c["status"] != "ok":
+                continue
+            r = c["roofline"]
+            print(f"| {c['tag']} | {c['arch']} | {c['shape']} | "
+                  f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+                  f"{r['collective_s']:.4f} | {r['dominant'].replace('_s','')} | "
+                  f"{r['roofline_fraction']:.4f} | "
+                  f"{fmt_bytes(c['memory']['temp_bytes'])} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""§Perf hillclimb: hypothesis -> change -> re-lower -> measure.
+
+Three cells (chosen per EXPERIMENTS.md §Perf):
+  - hymba_1_5b  prefill_32k  (worst roofline fraction, memory-bound)
+  - olmoe_1b_7b train_4k     (most collective-bound)
+  - arctic_480b train_4k     (paper-representative: biggest data-intensive
+                              training cell; memory + collective bound)
+
+Each iteration re-runs the dry-run cell with a tagged plan override; the
+EXPERIMENTS.md §Perf log interprets before/after.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell
+
+OUT = "results/dryrun"
+
+
+def show(rec):
+    if rec["status"] != "ok":
+        print(f"  !! {rec['status']}: {rec.get('error','')[:200]}")
+        return
+    r = rec["roofline"]
+    temp = (rec["memory"]["temp_bytes"] or 0) / 1e9
+    coll = rec["collectives"]["per_kind"]
+    ck = " ".join(f"{k}={v/1e9:.1f}GB" for k, v in sorted(coll.items()))
+    print(f"  comp={r['compute_s']:8.3f}s mem={r['memory_s']:8.3f}s "
+          f"coll={r['collective_s']:8.3f}s dom={r['dominant'][:-2]} "
+          f"rf={r['roofline_fraction']:.4f} temp={temp:.1f}GB\n"
+          f"  wire: {ck}")
+
+
+RUNS = [
+    # (arch, shape, tag, overrides, hypothesis-one-liner)
+    ("hymba_1_5b", "prefill_32k", "it1_ssmchunk", {},
+     "chunked SSM scan stops materializing [B,T,di,N]"),
+    ("olmoe_1b_7b", "train_4k", "it1_micro4", {"microbatches": 4},
+     "4x fewer grad-accum rounds -> grad all-reduce wire /4"),
+    ("olmoe_1b_7b", "train_4k", "it2_micro4_bf16",
+     {"microbatches": 4, "grad_accum_dtype": "bf16"},
+     "bf16 accumulators halve remaining grad wire"),
+    ("arctic_480b", "train_4k", "it1_micro4", {"microbatches": 4},
+     "FSDP weight gathers amortize over 4x bigger microbatches"),
+    ("arctic_480b", "train_4k", "it2_micro4_chunk",
+     {"microbatches": 4, "attn_chunk_threshold": 2048},
+     "chunked attention removes replicated 56-head score tensors"),
+    ("arctic_480b", "train_4k", "it3_micro2_chunk_bf16",
+     {"microbatches": 2, "attn_chunk_threshold": 2048,
+      "grad_accum_dtype": "bf16"},
+     "push further: 2 microbatches + bf16 accum"),
+    ("hymba_1_5b", "prefill_32k", "it2_chunk2048",
+     {"attn_chunk_threshold": 2048},
+     "smaller attention chunks cut transient scores further"),
+    ("olmoe_1b_7b", "train_4k", "it3_micro1_bf16",
+     {"microbatches": 1, "grad_accum_dtype": "bf16"},
+     "single batch: no accumulation at all (16 rows/device fit)"),
+]
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for arch, shape, tag, over, hyp in RUNS:
+        if only and only not in tag and only not in arch:
+            continue
+        print(f"== {arch} {shape} [{tag}] — {hyp}")
+        rec = run_cell(arch, shape, False, out_dir=OUT,
+                       plan_overrides=over, tag=tag)
+        show(rec)
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Checkpoint/restart + failure handling substrate."""
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.failover import FailureDetector, ElasticPlanner
+
+__all__ = ["CheckpointManager", "FailureDetector", "ElasticPlanner"]

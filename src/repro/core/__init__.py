@@ -1,0 +1,25 @@
+"""The paper's contribution: the Hot/Cold Data Carousel (HCDC) model.
+
+- ``carousel``: the data-carousel sliding window (allocate/stage/evict).
+- ``hotcold``: hot/cold storage policies (popularity migration thresholds,
+  cold-tier deletion strategies — the latter beyond-paper, paper §6).
+- ``hcdc``: the full HCDC scenario (Fig. 4 sites, Fig. 5 job state machine,
+  configurations I/II/III of Table 5).
+- ``validation``: the §4.2 simulation-correctness scenario (Table 2).
+- ``planner``: the §6 decision tool (sweep limits -> cost/throughput frontier).
+"""
+
+from repro.core.carousel import SlidingWindow
+from repro.core.hcdc import HCDCConfig, HCDCScenario, CONFIG_I, CONFIG_II, CONFIG_III
+from repro.core.validation import ValidationConfig, ValidationScenario
+
+__all__ = [
+    "SlidingWindow",
+    "HCDCConfig",
+    "HCDCScenario",
+    "CONFIG_I",
+    "CONFIG_II",
+    "CONFIG_III",
+    "ValidationConfig",
+    "ValidationScenario",
+]

@@ -1,0 +1,79 @@
+"""Hot/Cold storage policies (paper §2.2 and §6 future work).
+
+Strategy objects deciding (a) which evicted hot-tier data migrates to the
+cold tier and (b) how the cold tier itself is trimmed. The paper's
+implemented variation migrates *everything* prior to hot deletion and never
+deletes from cold storage; it explicitly lists popularity thresholds for
+migration and cold-tier deletion as variations/future work — both are
+implemented here (beyond-paper, used by ``HCDCConfig.migration_policy`` /
+``cold_deletion_policy`` and by the production tiered store).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass
+class MigrationPolicy:
+    """Hot -> cold migration decision at hot-tier eviction time.
+
+    ``min_popularity``: only migrate data at least this popular (paper §2.2:
+    "set a threshold based on the popularity metric and only allow
+    transferring data to the cold storage that have a certain popularity ...
+    to improve the hit/miss ratio"). 0 = migrate everything (paper's
+    implemented variation).
+    """
+
+    min_popularity: int = 0
+
+    def should_migrate(self, popularity: int) -> bool:
+        return popularity >= self.min_popularity
+
+
+@dataclass
+class ColdDeletionPolicy:
+    """Cold-tier trimming (paper §6: "essential feature" left as future work).
+
+    When the cold tier's used volume exceeds ``capacity_threshold`` x limit,
+    the least popular (ties: least recently used) data is deleted until the
+    tier is back under the threshold. Disabled when the cold tier is
+    unlimited (the paper's configuration III) or ``capacity_threshold`` is
+    None.
+    """
+
+    capacity_threshold: Optional[float] = None  # fraction of the limit
+
+    def trim_target(self, limit: Optional[float], used: float) -> float:
+        """Bytes to free (0 if no trim needed)."""
+        if self.capacity_threshold is None or limit is None:
+            return 0.0
+        cap = self.capacity_threshold * limit
+        return max(0.0, used - cap)
+
+
+@dataclass
+class PopularityModel:
+    """Static popularity assignment (paper Table 3) + selection weighting.
+
+    ``selection_power``: jobs select input files with probability
+    proportional to ``popularity ** selection_power``. The paper only states
+    selection is "based on the popularity"; gamma = 3.5 is calibrated so the
+    unique-file footprint reproduces Table 7 (6.75 PB tape->disk per site in
+    configuration I; the literal gamma = 1 yields ~2x too many unique files
+    — see EXPERIMENTS.md "Calibration").
+    """
+
+    p: float = 0.1
+    lo: int = 1
+    hi: int = 50
+    selection_power: float = 3.5
+
+    def sample_popularity(self, rng, n: int):
+        import numpy as np
+
+        return np.clip(rng.geometric(self.p, n), self.lo, self.hi - 1)
+
+    def selection_weights(self, popularity):
+        return popularity.astype(float) ** self.selection_power

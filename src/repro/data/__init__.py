@@ -1,0 +1,7 @@
+"""Data substrate: HCDC tiered store + token pipeline."""
+
+from repro.data.tiered_store import TieredStore, TierSpec, Shard
+from repro.data.pipeline import TokenPipeline, SyntheticCorpus
+
+__all__ = ["TieredStore", "TierSpec", "Shard", "TokenPipeline",
+           "SyntheticCorpus"]

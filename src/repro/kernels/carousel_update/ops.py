@@ -1,0 +1,43 @@
+"""Jitted wrappers for the carousel tick kernel.
+
+``carousel_tick`` picks the Pallas kernel (interpret mode on CPU; compiled
+on TPU) or the jnp reference. ``simulate_ticks`` scans the tick over many
+steps — the fully vectorized tick engine (the accelerator-native
+equivalent of the paper's transfer-manager loop) used by the throughput
+benchmark.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.carousel_update.carousel_update import carousel_tick_pallas
+from repro.kernels.carousel_update.ref import carousel_tick_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def carousel_tick(link_id, active, done, total, bw, mode, dt,
+                  use_pallas: bool = True, interpret: bool = True):
+    if use_pallas:
+        return carousel_tick_pallas(link_id, active, done, total, bw, mode,
+                                    dt, interpret=interpret)
+    return carousel_tick_ref(link_id, active, done, total, bw, mode, dt)
+
+
+@functools.partial(jax.jit, static_argnames=("n_ticks",))
+def simulate_ticks(link_id, active, done, total, bw, mode, dt, n_ticks: int):
+    """Run n_ticks of the tick engine; transfers complete and deactivate."""
+
+    def body(carry, _):
+        act, dn = carry
+        new_done, completed, _ = carousel_tick_ref(link_id, act, dn, total,
+                                                   bw, mode, dt)
+        act = jnp.logical_and(act, jnp.logical_not(completed))
+        return (act, new_done), completed.sum()
+
+    (act, dn), completions = jax.lax.scan(body, (active, done),
+                                          None, length=n_ticks)
+    return act, dn, completions

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the carousel tick (matches the paper's tick math
+and the scalar update of ``repro.sim.transfer.BandwidthTransferManager``)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def carousel_tick_ref(link_id, active, done, total, bw, mode, dt):
+    """Same contract as carousel_tick_pallas."""
+    m = bw.shape[0]
+    act = active.astype(jnp.float32)
+    counts = jax.ops.segment_sum(act, link_id, num_segments=m)
+    bw_i = bw[link_id]
+    mode_i = mode[link_id]
+    counts_i = counts[link_id]
+    shared = bw_i / jnp.maximum(counts_i, 1.0)
+    rate = jnp.where(mode_i > 0, bw_i, shared)
+    new_done = jnp.minimum(total, done + act * rate * dt)
+    completed = jnp.logical_and(new_done >= total, active)
+    return new_done, completed, counts

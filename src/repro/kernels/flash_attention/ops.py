@@ -1,0 +1,37 @@
+"""Jitted wrapper: padding to MXU tiles + kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    BLOCK_K,
+    BLOCK_Q,
+    flash_attention_pallas,
+)
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "use_pallas",
+                                    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_pallas: bool = True, interpret: bool = True):
+    """Pads T/S to 128 multiples, runs the kernel, slices back."""
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    B, nh, T, hd = q.shape
+    S = k.shape[2]
+    pt = (-T) % BLOCK_Q
+    ps = (-S) % BLOCK_K
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pt), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    # Padded KV columns sit at positions > any real query position, so the
+    # causal mask removes them; padded Q rows are sliced off below.
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 interpret=interpret)
+    return out[:, :, :T]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (masked full-score softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, nh, T, hd]; k/v: [B, nkv, S, hd]. Returns [B, nh, T, hd]."""
+    B, nh, T, hd = q.shape
+    nkv = k.shape[1]
+    if nkv != nh:
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    S = k.shape[2]
+    rel = jnp.arange(T)[:, None] - jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

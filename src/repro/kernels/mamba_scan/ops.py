@@ -1,0 +1,34 @@
+"""Jitted wrapper for the Mamba chunked scan (padding + dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.mamba_scan import (
+    D_BLOCK,
+    T_CHUNK,
+    mamba_scan_pallas,
+)
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def mamba_scan(dA, dBu, C, *, use_pallas: bool = True,
+               interpret: bool = True):
+    """dA, dBu: [B, T, D, N] f32; C: [B, T, N] f32 -> y [B, T, D] f32."""
+    if not use_pallas:
+        return mamba_scan_ref(dA, dBu, C)
+    B, T, D, N = dA.shape
+    pt = (-T) % T_CHUNK
+    pd = (-D) % D_BLOCK
+    if pt or pd:
+        # dA pads with 1.0 (identity decay) so the carry stays valid.
+        dA = jnp.pad(dA, ((0, 0), (0, pt), (0, pd), (0, 0)),
+                     constant_values=1.0)
+        dBu = jnp.pad(dBu, ((0, 0), (0, pt), (0, pd), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pt), (0, 0)))
+    y = mamba_scan_pallas(dA, dBu, C)
+    return y[:, :T, :D]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: associative scan over time (same math as
+``repro.models.ssm.ssm_scan_ref``, reduced to y output)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dA, dBu, C):
+    """dA, dBu: [B, T, D, N]; C: [B, T, N] -> y [B, T, D] f32."""
+
+    def combine(a, b):
+        a_d, a_h = a
+        b_d, b_h = b
+        return a_d * b_d, b_d * a_h + b_h
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    return jnp.einsum("btdn,btn->btd", h, C)

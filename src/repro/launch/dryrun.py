@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract inputs (ShapeDtypeStruct — zero
+allocation), derives in/out shardings from the parallel plan, and runs
+``jax.jit(step).lower(...).compile()`` on the production mesh. Success
+proves the distribution config is coherent; the compiled artifact yields
+``memory_analysis()`` (fits-check) and ``cost_analysis()`` + collective
+bytes (roofline terms), recorded as JSON under results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, canonical, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (
+    SHAPES,
+    cell_supported,
+    decode_cache_len,
+    input_specs,
+)
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    plan_for,
+)
+from repro.roofline.analysis import roofline_report
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               plan_overrides: Dict[str, Any] | None = None,
+               config_overrides: Dict[str, Any] | None = None):
+    """Build + lower one cell; returns (lowered, mesh, plan, meta)."""
+    cfg = get_config(arch)
+    if config_overrides:
+        cfg = cfg.replace(**config_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_for(cfg, shape_name, mesh)
+    if plan_overrides:
+        import dataclasses
+        plan = dataclasses.replace(plan, **plan_overrides)
+    kind = SHAPES[shape_name]["kind"]
+    # perf knob: per-cell chunked-attention threshold override
+    from repro.models import attention as _attn
+    if plan.attn_chunk_threshold:
+        _attn.CHUNKED_ATTN_THRESHOLD = plan.attn_chunk_threshold
+    specs = input_specs(cfg, shape_name)
+    p_shape = _abstract_params(cfg)
+    p_shard = param_shardings(mesh, plan, p_shape)
+    b_shard = batch_shardings(mesh, specs)
+
+    with mesh:
+        if kind == "train":
+            step = make_train_step(cfg, plan, mesh)
+            opt = make_optimizer(plan.optimizer)
+            o_shape = jax.eval_shape(opt.init, p_shape)
+            # ZeRO-1: optimizer state always carries the FSDP (data) axis on
+            # top of TP, even when weights themselves stay replicated.
+            import dataclasses as _dc
+            o_shard = param_shardings(mesh, _dc.replace(plan, fsdp=True),
+                                      o_shape)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard,
+                               NamedSharding(mesh, P())),
+            )
+            lowered = jitted.lower(p_shape, o_shape, specs)
+        elif kind == "prefill":
+            batch = SHAPES[shape_name]["batch"]
+            seq = SHAPES[shape_name]["seq"]
+            cache_shape = jax.eval_shape(
+                lambda: init_cache(cfg, batch, seq + 8))
+            c_shard = cache_shardings(mesh, plan, cfg, cache_shape)
+            stepfn = make_prefill_step(cfg, mesh, moe_local_dispatch=plan.moe_local_dispatch, no_ep=plan.no_ep)
+            jitted = jax.jit(
+                stepfn,
+                in_shardings=(p_shard, b_shard, c_shard),
+            )
+            lowered = jitted.lower(p_shape, specs, cache_shape)
+        else:  # decode
+            batch = SHAPES[shape_name]["batch"]
+            S = decode_cache_len(shape_name)
+            cache_shape = jax.eval_shape(lambda: init_cache(cfg, batch, S))
+            if cfg.is_enc_dec:  # cross-kv cache from a 4096-frame encoder pass
+                ck = jax.ShapeDtypeStruct(
+                    (cfg.n_layers, batch, 4096, cfg.n_kv_heads, cfg.hd),
+                    cfg.dtype)
+                cache_shape["cross_kv"] = (ck, ck)
+            c_shard = cache_shardings(mesh, plan, cfg, cache_shape)
+            stepfn = make_decode_step(cfg, mesh, moe_local_dispatch=plan.moe_local_dispatch, no_ep=plan.no_ep)
+            jitted = jax.jit(
+                stepfn,
+                in_shardings=(p_shard, b_shard["tokens"], c_shard, None),
+            )
+            lowered = jitted.lower(p_shape, specs["tokens"], cache_shape,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered, mesh, plan, {"cfg": cfg, "kind": kind}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None,
+             plan_overrides: Dict[str, Any] | None = None,
+             config_overrides: Dict[str, Any] | None = None,
+             tag: str = "") -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, why = cell_supported(arch, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        lowered, mesh, plan, meta = lower_cell(arch, shape_name, multi_pod,
+                                               plan_overrides,
+                                               config_overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = analyze_hlo(compiled.as_text())  # trip-count corrected
+        cfg = meta["cfg"]
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            plan={k: getattr(plan, k) for k in
+                  ("fsdp", "microbatches", "seq_shard_cache", "optimizer",
+                   "shard_activation_seq", "remat_policy",
+                   "grad_accum_dtype", "moe_local_dispatch")},
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            cost_raw={  # as reported (scan bodies counted once)
+                "flops": cost.get("flops"),
+                "bytes_accessed": cost.get("bytes accessed"),
+            },
+            cost={  # trip-count corrected per-chip program cost
+                "flops": hlo["flops"],
+                "bytes_accessed": hlo["bytes_accessed"],
+            },
+            collectives={
+                "total_wire_bytes": hlo["collective_wire_bytes"],
+                "per_kind": hlo["collective_per_kind"],
+                "count": hlo["collective_counts"],
+            },
+            model_params=cfg.param_count(),
+            model_params_active=cfg.active_param_count(),
+            roofline=roofline_report(
+                kind=meta["kind"], cfg=cfg, shape=SHAPES[shape_name],
+                n_chips=mesh.size, flops=hlo["flops"],
+                bytes_accessed=hlo["bytes_accessed"],
+                coll={"total_wire_bytes": hlo["collective_wire_bytes"]}),
+        )
+    except Exception as e:  # record failures as first-class results
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(out_dir,
+                            f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--tag", type=str, default="")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHITECTURES if (args.all or args.arch is None) else [canonical(args.arch)]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+    for a, s in cells:
+        rec = run_cell(a, s, args.multi_pod, out_dir=args.out, tag=args.tag)
+        mem = rec.get("memory", {})
+        peak = (mem.get("temp_bytes") or 0) / 1e9
+        print(f"[{rec['status']:7s}] {a:24s} {s:12s} {rec['mesh']:8s} "
+              f"temp={peak:7.2f}GB flops={rec.get('cost', {}).get('flops', 0):.3e} "
+              f"{rec.get('reason', rec.get('error', ''))}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

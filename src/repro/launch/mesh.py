@@ -1,0 +1,24 @@
+"""Production mesh definition.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to obtain 512 placeholder devices; smoke tests and benchmarks see
+the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,47 @@
+"""Serving driver: batched greedy decoding on a (reduced) model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import canonical, get_smoke_config
+from repro.models import init_params
+from repro.serve.engine import Request, ServeLoop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(canonical(args.arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    loop = ServeLoop(cfg, params, batch_slots=args.slots,
+                     max_len=args.max_len)
+    reqs = [
+        Request(rid=i,
+                prompt=jax.random.randint(jax.random.PRNGKey(i), (16,), 0,
+                                          cfg.vocab_size),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    out = loop.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in out.values())
+    print(f"served {len(out)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

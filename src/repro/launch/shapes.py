@@ -1,0 +1,93 @@
+"""Assigned input shapes and abstract input specs per (arch x shape).
+
+Shapes (LM-family: seq_len x global_batch):
+  train_4k     4,096 x 256   -> train_step
+  prefill_32k  32,768 x 32   -> prefill_step
+  decode_32k   32,768 x 128  -> serve_step (1 new token, seq_len KV cache)
+  long_500k    524,288 x 1   -> serve_step; sub-quadratic archs only
+
+``long_500k`` runs for ssm (falcon-mamba), hybrid (hymba) and
+mostly-local gemma3; it is skipped for pure full-attention archs
+(command-r, qwen3, mistral-large, arctic, olmoe, phi-3-vision, seamless)
+— see DESIGN.md §Arch-applicability.
+
+Modality interpretation (documented in DESIGN.md): phi-3-vision's 4k train
+sequence = 256 stub patch tokens + 3,840 text tokens; seamless train feeds
+seq_len stub audio frames to the encoder and seq_len/4 text tokens to the
+decoder; seamless serve shapes decode against a seq_len decoder cache with
+a fixed 4,096-frame encoder context.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+LONG_CONTEXT_OK = {"falcon_mamba_7b", "hymba_1_5b", "gemma3_27b"}
+
+
+def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, "pure full-attention arch: long_500k skipped (quadratic)"
+    return True, ""
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    s = SHAPES[shape_name]
+    seq, batch, kind = s["seq"], s["batch"], s["kind"]
+    i32 = jnp.int32
+
+    if kind == "train":
+        if cfg.frontend == "vision":
+            text = seq - cfg.frontend_tokens
+            return {
+                "tokens": _sds((batch, text), i32),
+                "labels": _sds((batch, text), i32),
+                "frontend": _sds((batch, cfg.frontend_tokens, cfg.frontend_dim),
+                                 cfg.dtype),
+            }
+        if cfg.is_enc_dec:
+            return {
+                "tokens": _sds((batch, seq // 4), i32),
+                "labels": _sds((batch, seq // 4), i32),
+                "enc_input": _sds((batch, seq, cfg.frontend_dim), jnp.float32),
+            }
+        return {
+            "tokens": _sds((batch, seq), i32),
+            "labels": _sds((batch, seq), i32),
+        }
+
+    if kind == "prefill":
+        out = {"tokens": _sds((batch, seq), i32)}
+        if cfg.frontend == "vision":
+            out["tokens"] = _sds((batch, seq - cfg.frontend_tokens), i32)
+            out["frontend"] = _sds((batch, cfg.frontend_tokens, cfg.frontend_dim),
+                                   cfg.dtype)
+        if cfg.is_enc_dec:
+            out["enc_input"] = _sds((batch, 4096, cfg.frontend_dim), jnp.float32)
+        return out
+
+    # decode: one new token against a seq-length cache
+    out = {"tokens": _sds((batch, 1), i32)}
+    return out
+
+
+def decode_cache_len(shape_name: str) -> int:
+    return SHAPES[shape_name]["seq"]

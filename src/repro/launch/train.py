@@ -1,0 +1,119 @@
+"""End-to-end training driver.
+
+Wires together: arch config -> model init -> parallel plan/mesh ->
+HCDC tiered data pipeline -> train_step -> checkpoint manager (+ restart)
+-> failure detector. On CPU it runs reduced configs (examples/ and smoke
+tests); on a real slice, the same driver with ``--mesh production``.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20 \
+      --reduced --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.failover import FailureDetector
+from repro.configs import canonical, get_config, get_smoke_config
+from repro.core.hotcold import MigrationPolicy
+from repro.data.pipeline import SyntheticCorpus, TokenPipeline
+from repro.data.tiered_store import TierSpec, TieredStore
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import init_params
+from repro.parallel.sharding import ParallelPlan, plan_for
+from repro.sim.cloud import GCSCostModel
+from repro.train.optimizer import OptConfig, make_optimizer
+from repro.train.train_step import make_train_step
+
+
+def make_store() -> TieredStore:
+    """Default HCDC tier topology (Table 4 rates scaled to shard sizes)."""
+    return TieredStore(
+        archival=TierSpec("tape", None, latency_s=1.0, bandwidth=60e6),
+        cold=TierSpec("gcs", 50e9, latency_s=0.05, bandwidth=300e6,
+                      cost_model=GCSCostModel()),
+        hot=TierSpec("ssd", 2e9, latency_s=0.0, bandwidth=1e9),
+        migration=MigrationPolicy(min_popularity=0),
+    )
+
+
+def train(arch: str, steps: int = 20, reduced: bool = True,
+          batch: int = 8, seq: int = 128, ckpt_dir: Optional[str] = None,
+          resume: bool = False, use_store: bool = True,
+          log_every: int = 5) -> Dict[str, Any]:
+    cfg = get_smoke_config(arch) if reduced else get_config(arch)
+    mesh = make_debug_mesh(1, 1) if reduced else make_production_mesh()
+    plan = ParallelPlan(microbatches=1) if reduced else plan_for(cfg, "train_4k", mesh)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer(plan.optimizer)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, plan, mesh))
+
+    corpus = SyntheticCorpus(cfg.vocab_size, seq, batch, n_shards=4 * steps)
+    store = make_store() if use_store else None
+    pipeline = TokenPipeline(corpus, store=store, epochs=4)
+
+    ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if ckpt and resume and ckpt.latest_step() is not None:
+        state, start, extra = ckpt.restore({"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        pipeline.restore(extra.get("pipeline", {"position": start}))
+
+    detector = FailureDetector(timeout_s=60.0)
+    losses = []
+    t0 = time.time()
+    with mesh:
+        for step in range(start, steps):
+            batch_np = next(pipeline)
+            batch_dev = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+            detector.heartbeat("worker-0", time.time())
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % log_every == 0:
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):8.3f}", flush=True)
+            if ckpt and (step + 1) % 10 == 0:
+                ckpt.save_async(step + 1, params, opt_state,
+                                extra={"pipeline": pipeline.state()})
+    if ckpt:
+        ckpt.wait()
+    out = {
+        "losses": losses,
+        "wall_s": time.time() - t0,
+        "final_loss": losses[-1] if losses else None,
+        "store_stats": dict(store.stats) if store else {},
+        "data_wait_s": pipeline.prefetcher.total_wait_s if store else 0.0,
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    out = train(canonical(args.arch), steps=args.steps, reduced=args.reduced,
+                batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                resume=args.resume)
+    print(f"done: final_loss={out['final_loss']:.4f} wall={out['wall_s']:.1f}s "
+          f"store={out['store_stats']}")
+
+
+if __name__ == "__main__":
+    main()

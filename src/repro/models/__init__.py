@@ -1,0 +1,29 @@
+"""Model zoo: all assigned architectures built from one composable config.
+
+Families: dense GQA transformers (command-r, qwen3, gemma3, mistral-large,
+phi-3-vision backbone), MoE (arctic w/ dense residual, olmoe), SSM
+(falcon-mamba), hybrid attn+SSM (hymba), enc-dec (seamless backbone).
+Functional style: ``init_params(cfg, key)`` -> pytree, ``forward(cfg,
+params, tokens)`` -> logits, plus prefill/decode entry points with KV/SSM
+caches. Layers are scan-stacked for small HLO and fast compiles.
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    init_params,
+    forward,
+    loss_fn,
+    prefill,
+    decode_step,
+    init_cache,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+]

@@ -1,0 +1,246 @@
+"""GQA attention: training/prefill masked attention + KV-cache decode.
+
+Variants handled by flags: qk-norm (qwen3), sliding-window masks
+(gemma3 5:1 local:global, hymba local+3-global), attention bias, logit
+softcap. Training/prefill uses a masked full-score reference path (clean
+HLO for the dry-run roofline); the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU hot-spot implementation and is
+validated against this path. Decode attends one query position against a
+length-S cache (optionally ring-buffered for local layers).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.modules import apply_rope, dense_init, init_rms_norm, rms_norm
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_attention(key, cfg: ModelConfig, n_kv: Optional[int] = None) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    nh = cfg.n_heads
+    nkv = n_kv if n_kv is not None else cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nh, hd), in_axis_size=d, dtype=cfg.dtype),
+        "wk": dense_init(ks[1], (d, nkv, hd), in_axis_size=d, dtype=cfg.dtype),
+        "wv": dense_init(ks[2], (d, nkv, hd), in_axis_size=d, dtype=cfg.dtype),
+        "wo": dense_init(ks[3], (nh, hd, d), in_axis_size=nh * hd, dtype=cfg.dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((nh, hd), dtype=cfg.dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype=cfg.dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype=cfg.dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd)
+        p["k_norm"] = init_rms_norm(hd)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B, S, nkv, hd] -> [B, S, nh, hd] by repeating each KV head."""
+    nkv = k.shape[-2]
+    if nkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // nkv, axis=-2)
+
+
+def causal_window_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                       window: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """[Tq, Tk] bool; window None/0 => full causal, else i-j < window."""
+    rel = q_pos[:, None] - k_pos[None, :]
+    mask = rel >= 0
+    if window is not None:
+        mask &= rel < window
+    return mask
+
+
+# Sequences longer than this use the chunked online-softmax path so the
+# [T, S] score matrix is never materialized (prefill_32k would need ~80 GB
+# per device otherwise). Env-overridable: the §Perf iterations drop it to
+# 2048 for archs whose (replicated-head) score tensors dominate memory.
+import os as _os
+
+CHUNKED_ATTN_THRESHOLD = int(_os.environ.get("REPRO_ATTN_CHUNK_THRESHOLD",
+                                             "8192"))
+ATTN_CHUNK = int(_os.environ.get("REPRO_ATTN_CHUNK", "1024"))
+
+
+def _chunked_attention(q, k, v, positions, window, causal: bool):
+    """Softmax over Q chunks; scores per chunk: [B, h, C, S'].
+
+    When ``window`` is a STATIC int (Python-loop serving path for
+    sliding-window archs), each Q chunk only slices the [chunk_start -
+    window + 1, chunk_end] KV band — S' = C + window instead of the full
+    sequence. For hymba's 29/32 local layers at 32k prefill that is a 16x
+    score-bytes reduction (§Perf iteration it4_winslice)."""
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    C = min(ATTN_CHUNK, T)
+    n_chunks = T // C
+    qc = q.reshape(B, n_chunks, C, H, D).swapaxes(0, 1)  # [n, B, C, H, D]
+    pc = positions[0].reshape(n_chunks, C)
+    k_pos_full = positions[0]
+    static_window = isinstance(window, int) and 0 < window < S
+
+    def chunk(carry, inp):
+        qb, pb = inp  # [B, C, H, D], [C]
+        if static_window:
+            span = C + window  # KV band covering this chunk's lookback
+            start = jnp.clip(pb[0] - window + 1, 0, S - span)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            k_pos = jax.lax.dynamic_slice_in_dim(k_pos_full, start, span)
+        else:
+            kb, vb, k_pos = k, v, k_pos_full
+        s = jnp.einsum("bchd,bshd->bhcs", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32))
+        rel = pb[:, None] - k_pos[None, :]
+        mask = jnp.ones(rel.shape, dtype=bool)
+        if causal:
+            mask &= rel >= 0
+        if window is not None:
+            mask &= rel < window
+        s = jnp.where(mask[None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        ob = jnp.einsum("bhcs,bshd->bchd", w, vb.astype(jnp.float32))
+        return carry, ob.astype(q.dtype)
+
+    _, out = jax.lax.scan(chunk, None, (qc, pc))
+    return out.swapaxes(0, 1).reshape(B, T, H, D)
+
+
+def attention_core(p: Params, cfg: ModelConfig, q, k, v,
+                   positions: jnp.ndarray,
+                   window: Optional[jnp.ndarray] = None,
+                   causal: bool = True) -> jnp.ndarray:
+    """Attention from projected q/k/v ([B, T, h, hd]); returns [B, T, d]."""
+    T = q.shape[1]
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    scale = cfg.hd ** -0.5
+    if T >= CHUNKED_ATTN_THRESHOLD and cfg.attn_logit_softcap is None:
+        out = _chunked_attention(q * scale, k, v, positions, window, causal)
+        return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    scores = jnp.einsum("bthk,bshk->bhts", q, k) * scale
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    if causal:
+        mask = causal_window_mask(positions[0], positions[0], window)
+        scores = jnp.where(mask[None, None], scores, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", w, v)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+def attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray,
+              window: Optional[jnp.ndarray] = None,
+              causal: bool = True) -> jnp.ndarray:
+    """Training/prefill attention. x: [B, T, d]; window: scalar or None.
+
+    ``window`` may be a traced scalar (scan-over-layers passes
+    ``where(is_global, T, w)``), keeping heterogeneous local/global stacks in
+    one homogeneous scan.
+    """
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    return attention_core(p, cfg, q, k, v, positions, window, causal)
+
+
+# ----------------------------------------------------------------- decode
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int,
+                  n_kv: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    nkv = n_kv if n_kv is not None else cfg.n_kv_heads
+    shape = (batch, length, nkv, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype=cfg.dtype),
+        "v": jnp.zeros(shape, dtype=cfg.dtype),
+    }
+
+
+def decode_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                     cache: Dict[str, jnp.ndarray], t: jnp.ndarray,
+                     window: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. x: [B, 1, d]; cache k/v: [B, S, nkv, hd]; t: current
+    position (scalar int). Ring-buffer addressing: slot = t mod S (exact for
+    local layers with S == window; for global layers S >= max positions)."""
+    B, _, _ = x.shape
+    S = cache["k"].shape[1]
+    pos = jnp.full((B, 1), t, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos)
+    slot = jnp.mod(t, S)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    new_cache = {"k": k, "v": v}
+    kx = _expand_kv(k, cfg.n_heads)
+    vx = _expand_kv(v, cfg.n_heads)
+    scale = cfg.hd ** -0.5
+    scores = jnp.einsum("bthk,bshk->bhts", q, kx) * scale  # [B, h, 1, S]
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    # Valid slots: written positions within the causal window.
+    s_idx = jnp.arange(S)
+    # Position stored in slot s (ring): the latest p <= t with p mod S == s.
+    stored_pos = t - jnp.mod(t - s_idx, S)
+    valid = stored_pos >= 0
+    if window is not None:
+        valid &= (t - stored_pos) < window
+    scores = jnp.where(valid[None, None, None], scores, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", w, vx)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"]), new_cache
+
+
+# ------------------------------------------------------------ cross-attn
+def init_cross_attention(key, cfg: ModelConfig) -> Params:
+    d, hd, nh = cfg.d_model, cfg.hd, cfg.n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, nh, hd), in_axis_size=d, dtype=cfg.dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, hd), in_axis_size=d, dtype=cfg.dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, hd), in_axis_size=d, dtype=cfg.dtype),
+        "wo": dense_init(ks[3], (nh, hd, d), in_axis_size=nh * hd, dtype=cfg.dtype),
+    }
+
+
+def cross_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    enc_kv: Tuple[jnp.ndarray, jnp.ndarray]) -> jnp.ndarray:
+    """x: [B, T, d]; enc_kv: precomputed (k, v) [B, S, nkv, hd]."""
+    k, v = enc_kv
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    kx = _expand_kv(k, cfg.n_heads)
+    vx = _expand_kv(v, cfg.n_heads)
+    scores = jnp.einsum("bthk,bshk->bhts", q, kx) * (cfg.hd ** -0.5)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", w, vx)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+def encode_cross_kv(p: Params, cfg: ModelConfig,
+                    enc_out: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v

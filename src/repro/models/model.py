@@ -1,0 +1,472 @@
+"""Unified model: decoder LMs (dense/MoE/SSM/hybrid) and enc-dec backbones.
+
+Training (`forward`/`loss_fn`) scans over layer-stacked params with
+optional remat — one layer's HLO regardless of depth, so 88-layer models
+lower/compile fast. Per-layer heterogeneity (gemma3's 5:1 local:global
+windows, hymba's 3 global layers) rides along as a scanned int32 window
+array, keeping the stack homogeneous.
+
+Serving (`prefill`/`decode_step`) walks layers in a Python loop with
+*per-layer* caches, so local-attention layers keep ring buffers of window
+length while global layers keep full-length caches — the sub-quadratic
+memory that makes `long_500k` feasible for SSM/hybrid/mostly-local archs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.parallel.ctx import shard_batch
+from repro.models.modules import (
+    cross_entropy_loss,
+    dense_init,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    rms_norm,
+    swiglu,
+)
+
+Params = Dict[str, Any]
+
+_FULL_WINDOW = jnp.iinfo(jnp.int32).max // 2  # "no window" sentinel
+
+
+# --------------------------------------------------------------------- init
+def _init_layer(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": init_rms_norm(cfg.d_model)}
+    if cfg.has_attention:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg)
+    if cfg.family in ("dense", "vlm", "audio"):
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype)
+        p["norm2"] = init_rms_norm(cfg.d_model)
+    elif cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+        p["norm2"] = init_rms_norm(cfg.d_model)
+    elif cfg.family == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[3], cfg)
+        del p["norm1"]
+        p["norm1"] = init_rms_norm(cfg.d_model)
+    elif cfg.family == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(ks[3], cfg)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype)
+        p["norm2"] = init_rms_norm(cfg.d_model)
+        p["norm_attn_out"] = init_rms_norm(cfg.d_model)
+        p["norm_ssm_out"] = init_rms_norm(cfg.d_model)
+    if cross:
+        p["cross"] = attn_mod.init_cross_attention(ks[4], cfg)
+        p["norm_cross"] = init_rms_norm(cfg.d_model)
+    return p
+
+
+def _init_encoder_layer(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": init_rms_norm(cfg.d_model),
+        "attn": attn_mod.init_attention(ks[0], cfg),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype),
+        "norm2": init_rms_norm(cfg.d_model),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k_emb, k_layers, k_out, k_enc, k_fe = jax.random.split(key, 5)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(
+        lambda k: _init_layer(k, cfg, cross=cfg.is_enc_dec)
+    )(layer_keys)
+    p: Params = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "layers": layers,
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_out, (cfg.d_model, cfg.vocab_size),
+                                  in_axis_size=cfg.d_model, dtype=cfg.dtype)
+    if cfg.is_enc_dec:
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+        p["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_encoder_layer(k, cfg))(enc_keys),
+            "final_norm": init_rms_norm(cfg.d_model),
+        }
+    if cfg.frontend is not None:
+        p["frontend_proj"] = dense_init(
+            k_fe, (cfg.frontend_dim, cfg.d_model),
+            in_axis_size=cfg.frontend_dim, dtype=cfg.dtype)
+    return p
+
+
+def layer_windows(cfg: ModelConfig, full: Optional[int] = None) -> jnp.ndarray:
+    """Per-layer attention window (int32[L]); _FULL_WINDOW = global."""
+    w = []
+    for i in range(cfg.n_layers):
+        if cfg.is_global_layer(i) or cfg.sliding_window is None:
+            w.append(full if full is not None else _FULL_WINDOW)
+        else:
+            w.append(cfg.sliding_window)
+    return jnp.asarray(w, dtype=jnp.int32)
+
+
+# ------------------------------------------------------------------ forward
+def _layer_apply(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray, window: jnp.ndarray,
+                 enc_kv=None, shard_experts=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One transformer block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), dtype=jnp.float32)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        return x + ssm_mod.ssm_block(lp["ssm"], cfg, h), aux
+    if cfg.family == "hybrid":
+        a = attn_mod.attention(lp["attn"], cfg, h, positions, window=window)
+        s = ssm_mod.ssm_block(lp["ssm"], cfg, h)
+        mix = 0.5 * (rms_norm(a, lp["norm_attn_out"], cfg.norm_eps)
+                     + rms_norm(s, lp["norm_ssm_out"], cfg.norm_eps))
+        x = x + mix
+    else:
+        x = x + attn_mod.attention(lp["attn"], cfg, h, positions, window=window)
+    if enc_kv is not None:
+        hc = rms_norm(x, lp["norm_cross"], cfg.norm_eps)
+        x = x + attn_mod.cross_attention(lp["cross"], cfg, hc, enc_kv)
+    h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mo, aux = moe_mod.moe_layer(lp["moe"], cfg, h2, shard_experts=shard_experts)
+        x = x + mo
+    else:
+        x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return x, aux
+
+
+def _encode(cfg: ModelConfig, params: Params, enc_in: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional encoder over [B, S, d] inputs (audio frontend stub)."""
+    positions = jnp.broadcast_to(
+        jnp.arange(enc_in.shape[1], dtype=jnp.int32), enc_in.shape[:2])
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        x = x + attn_mod.attention(lp["attn"], cfg, h, positions, causal=False)
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return shard_batch(x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, enc_in, params["encoder"]["layers"])
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    """Token (+ stub-frontend) embedding. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.frontend is not None and cfg.frontend != "audio" and "frontend" in batch:
+        fe = jnp.einsum("bsf,fd->bsd", batch["frontend"].astype(cfg.dtype),
+                        params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+    return shard_batch(x), positions
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            shard_experts=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B, T, V], aux_loss)."""
+    x, positions = embed_inputs(cfg, params, batch)
+    enc_kv = None
+    if cfg.is_enc_dec:
+        enc_in = batch["enc_input"]
+        if cfg.frontend == "audio":
+            enc_in = jnp.einsum("bsf,fd->bsd", enc_in.astype(cfg.dtype),
+                                params["frontend_proj"])
+        enc_out = _encode(cfg, params, enc_in)
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, w = scanned
+        ekv = None
+        if cfg.is_enc_dec:
+            ekv = attn_mod.encode_cross_kv(lp["cross"], cfg, enc_out)
+        x, aux = _layer_apply(cfg, lp, x, positions, w, enc_kv=ekv,
+                              shard_experts=shard_experts)
+        return shard_batch(x), aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxes = jax.lax.scan(body, x, (params["layers"], windows))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head.astype(cfg.dtype))
+    return logits, jnp.sum(auxes)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            shard_experts=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(cfg, params, batch, shard_experts=shard_experts)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # stub frontend prefix: text tail only
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    mask = batch.get("mask")
+    ce = cross_entropy_loss(logits, labels, mask)
+    total = ce + cfg.router_aux_weight * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+def uniform_cache(cfg: ModelConfig) -> bool:
+    """True when every layer's cache has the same shape — then serving
+    scans over stacked layers (bounded liveness: one layer's weights are
+    gathered at a time under FSDP, and the HLO stays depth-independent).
+    Sliding-window archs (gemma3, hymba) keep per-layer ring buffers of
+    different lengths and walk layers in a Python loop instead."""
+    return cfg.sliding_window is None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Caches: stacked [L, ...] for uniform archs; per-layer list with ring
+    buffers for local-attention layers otherwise."""
+    if uniform_cache(cfg):
+        entry: Dict[str, Any] = {}
+        L = cfg.n_layers
+
+        def stack(tree):
+            return jax.tree.map(
+                lambda a: jnp.zeros((L,) + a.shape, a.dtype), tree)
+
+        if cfg.has_attention:
+            entry["kv"] = stack(attn_mod.init_kv_cache(cfg, batch, max_len))
+        if cfg.has_ssm:
+            entry["ssm"] = stack(ssm_mod.init_ssm_cache(cfg, batch))
+        cache: Dict[str, Any] = {"layers": entry}
+        if cfg.is_enc_dec:
+            cache["cross_kv"] = None  # filled by prefill (stacked)
+        return cache
+    layers: List[Dict[str, Any]] = []
+    for i in range(cfg.n_layers):
+        entry = {}
+        if cfg.has_attention:
+            if cfg.is_global_layer(i) or cfg.sliding_window is None:
+                s = max_len
+            else:
+                s = min(cfg.sliding_window, max_len)
+            entry["kv"] = attn_mod.init_kv_cache(cfg, batch, s)
+        if cfg.has_ssm:
+            entry["ssm"] = ssm_mod.init_ssm_cache(cfg, batch)
+        layers.append(entry)
+    cache = {"layers": layers}
+    if cfg.is_enc_dec:
+        cache["cross_kv"] = None
+    return cache
+
+
+def _layer_slice(params: Params, i: int) -> Params:
+    return jax.tree.map(lambda a: a[i], params["layers"])
+
+
+def _prefill_layer(cfg: ModelConfig, lp: Params, x, positions, window,
+                   entry: Dict[str, Any], enc_out,
+                   loop_path: bool = False):
+    """One FUSED layer of prefill: computes the block output and the cache
+    entry in a single pass (q/k/v projected once, the SSM scan run once —
+    §Perf iteration: the naive version recomputed every block via
+    ``_layer_apply`` after capturing caches, doubling prefill compute and
+    bytes). Returns (x_out, new_cache_entry, ekv)."""
+    T = x.shape[1]
+    new_entry: Dict[str, Any] = {}
+    ekv = None
+    if cfg.is_enc_dec:
+        ekv = attn_mod.encode_cross_kv(lp["cross"], cfg, enc_out)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    attn_out = None
+    if cfg.has_attention:
+        q, k, v = attn_mod._project_qkv(lp["attn"], cfg, h, positions)
+        S = entry["kv"]["k"].shape[1]
+        if S >= T:
+            new_entry["kv"] = {
+                "k": jax.lax.dynamic_update_slice_in_dim(entry["kv"]["k"], k, 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(entry["kv"]["v"], v, 0, axis=1),
+            }
+        else:  # ring buffer shorter than prompt: keep the tail
+            tail_k, tail_v = k[:, T - S:], v[:, T - S:]
+            roll = (T - S) % S  # align ring slots with position mod S
+            idx = jnp.mod(jnp.arange(S) + roll, S)
+            new_entry["kv"] = {
+                "k": jnp.zeros_like(entry["kv"]["k"]).at[:, idx].set(tail_k),
+                "v": jnp.zeros_like(entry["kv"]["v"]).at[:, idx].set(tail_v),
+            }
+        attn_out = attn_mod.attention_core(lp["attn"], cfg, q, k, v,
+                                           positions, window)
+    ssm_out = None
+    if cfg.has_ssm:
+        sp = lp["ssm"]
+        xz = jnp.einsum("btd,de->bte", h, sp["in_proj"])
+        u, z = jnp.split(xz, 2, axis=-1)
+        u_act = jax.nn.silu(ssm_mod._causal_conv1d(u, sp["conv_w"],
+                                                   sp["conv_b"]))
+        dA, dBu, Cm = ssm_mod._ssm_inputs(sp, cfg, u_act)
+        y, h_final = ssm_mod.ssm_scan_y(dA, dBu, Cm.astype(jnp.float32),
+                                        force_chunk=loop_path)
+        new_entry["ssm"] = {"h": h_final,
+                            "conv": u[:, -(cfg.ssm_conv - 1):, :]}
+        y = y + sp["D"] * u_act.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        ssm_out = jnp.einsum("btd,de->bte", y, sp["out_proj"])
+    # combine per family (mirrors _layer_apply)
+    if cfg.family == "ssm":
+        return x + ssm_out, new_entry, ekv
+    if cfg.family == "hybrid":
+        mix = 0.5 * (rms_norm(attn_out, lp["norm_attn_out"], cfg.norm_eps)
+                     + rms_norm(ssm_out, lp["norm_ssm_out"], cfg.norm_eps))
+        x = x + mix
+    else:
+        x = x + attn_out
+    if ekv is not None:
+        hc = rms_norm(x, lp["norm_cross"], cfg.norm_eps)
+        x = x + attn_mod.cross_attention(lp["cross"], cfg, hc, ekv)
+    h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mo, _ = moe_mod.moe_layer(lp["moe"], cfg, h2)
+        x = x + mo
+    else:
+        x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                       lp["mlp"]["w_down"])
+    return x, new_entry, ekv
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            cache: Dict[str, Any]) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Run the full prompt, filling caches. Returns (last-token logits, cache).
+
+    Uniform-cache archs scan over stacked layers (bounded liveness + small
+    HLO); sliding-window archs walk layers in a Python loop with per-layer
+    ring buffers."""
+    x, positions = embed_inputs(cfg, params, batch)
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_in = batch["enc_input"]
+        if cfg.frontend == "audio":
+            enc_in = jnp.einsum("bsf,fd->bsd", enc_in.astype(cfg.dtype),
+                                params["frontend_proj"])
+        enc_out = _encode(cfg, params, enc_in)
+    windows = layer_windows(cfg)
+    stacked = not isinstance(cache["layers"], list)
+    if stacked:
+        def body(x, scanned):
+            lp, w, entry = scanned
+            x, new_entry, ekv = _prefill_layer(cfg, lp, x, positions, w,
+                                               entry, enc_out)
+            return shard_batch(x), (new_entry, ekv)
+
+        x, (new_layers, ekvs) = jax.lax.scan(
+            body, x, (params["layers"], windows, cache["layers"]))
+        new_cache: Dict[str, Any] = {"layers": new_layers}
+        if cfg.is_enc_dec:
+            new_cache["cross_kv"] = ekvs
+    else:
+        new_list = []
+        cross = [] if cfg.is_enc_dec else None
+        for i in range(cfg.n_layers):
+            lp = _layer_slice(params, i)
+            # static window in the loop path: lets chunked attention slice
+            # the KV band instead of masking full-width scores
+            w_i = (None if (cfg.is_global_layer(i) or cfg.sliding_window is None)
+                   else int(cfg.sliding_window))
+            x, new_entry, ekv = _prefill_layer(cfg, lp, x, positions,
+                                               w_i,
+                                               cache["layers"][i], enc_out,
+                                               loop_path=True)
+            new_list.append(new_entry)
+            if cross is not None:
+                cross.append(ekv)
+        new_cache = {"layers": new_list}
+        if cfg.is_enc_dec:
+            new_cache["cross_kv"] = cross
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cfg.dtype))
+    return logits, new_cache
+
+
+def _decode_layer(cfg: ModelConfig, lp: Params, x, entry: Dict[str, Any],
+                  t, window, cross_kv=None):
+    """One layer of single-token decode: returns (x_out, new_entry)."""
+    new_entry: Dict[str, Any] = {}
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        s_out, new_entry["ssm"] = ssm_mod.ssm_decode_step(
+            lp["ssm"], cfg, h, entry["ssm"])
+        return x + s_out, new_entry
+    if cfg.family == "hybrid":
+        a_out, new_entry["kv"] = attn_mod.decode_attention(
+            lp["attn"], cfg, h, entry["kv"], t, window=window)
+        s_out, new_entry["ssm"] = ssm_mod.ssm_decode_step(
+            lp["ssm"], cfg, h, entry["ssm"])
+        mix = 0.5 * (rms_norm(a_out, lp["norm_attn_out"], cfg.norm_eps)
+                     + rms_norm(s_out, lp["norm_ssm_out"], cfg.norm_eps))
+        x = x + mix
+    else:
+        a_out, new_entry["kv"] = attn_mod.decode_attention(
+            lp["attn"], cfg, h, entry["kv"], t, window=window)
+        x = x + a_out
+    if cfg.is_enc_dec:
+        hc = rms_norm(x, lp["norm_cross"], cfg.norm_eps)
+        x = x + attn_mod.cross_attention(lp["cross"], cfg, hc, cross_kv)
+    h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mo, _ = moe_mod.moe_layer(lp["moe"], cfg, h2)
+        x = x + mo
+    else:
+        x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                       lp["mlp"]["w_down"])
+    return x, new_entry
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                cache: Dict[str, Any], t: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step. tokens: [B, 1]; t: scalar current position."""
+    x = params["embed"][tokens].astype(cfg.dtype)
+    windows = layer_windows(cfg)
+    stacked = not isinstance(cache["layers"], list)
+    if stacked:
+        cross = cache.get("cross_kv")
+
+        def body(x, scanned):
+            if cfg.is_enc_dec:
+                lp, w, entry, ckv = scanned
+            else:
+                lp, w, entry = scanned
+                ckv = None
+            x, new_entry = _decode_layer(cfg, lp, x, entry, t, w,
+                                         cross_kv=ckv)
+            return x, new_entry
+
+        xs = ((params["layers"], windows, cache["layers"], cross)
+              if cfg.is_enc_dec else
+              (params["layers"], windows, cache["layers"]))
+        x, new_layers = jax.lax.scan(body, x, xs)
+        new_cache: Dict[str, Any] = {"layers": new_layers}
+        if cfg.is_enc_dec:
+            new_cache["cross_kv"] = cross
+    else:
+        new_list: List[Dict[str, Any]] = []
+        for i in range(cfg.n_layers):
+            lp = _layer_slice(params, i)
+            ckv = cache["cross_kv"][i] if cfg.is_enc_dec else None
+            x, new_entry = _decode_layer(cfg, lp, x, cache["layers"][i], t,
+                                         windows[i], cross_kv=ckv)
+            new_list.append(new_entry)
+        new_cache = {"layers": new_list}
+        if cfg.is_enc_dec:
+            new_cache["cross_kv"] = cache["cross_kv"]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head.astype(cfg.dtype))
+    return logits[:, -1], new_cache

@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per assignment: backbone only).
+
+``[vlm]`` (phi-3-vision) and ``[audio]`` (seamless-m4t) entries specify the
+transformer backbone; the CLIP/speech frontends are stubs whose
+*precomputed* patch/frame embeddings arrive via ``input_specs()``. These
+helpers generate synthetic embeddings with the right shapes/dtypes for
+smoke tests and document the contract.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def synthetic_frontend(cfg: ModelConfig, key, batch: int) -> jnp.ndarray:
+    """[B, frontend_tokens, frontend_dim] stand-in for CLIP patch embeddings."""
+    assert cfg.frontend == "vision"
+    return jax.random.normal(
+        key, (batch, cfg.frontend_tokens, cfg.frontend_dim), dtype=jnp.float32
+    ).astype(cfg.dtype)
+
+
+def synthetic_frames(cfg: ModelConfig, key, batch: int, n_frames: int) -> jnp.ndarray:
+    """[B, n_frames, frontend_dim] stand-in for speech-encoder frame features."""
+    assert cfg.frontend == "audio"
+    return jax.random.normal(
+        key, (batch, n_frames, cfg.frontend_dim), dtype=jnp.float32
+    ).astype(cfg.dtype)
+
+
+def frontend_spec(cfg: ModelConfig, batch: int, n_tokens: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, n_tokens, cfg.frontend_dim), cfg.dtype)

@@ -1,0 +1,17 @@
+"""Distribution layer: mesh axes, logical sharding rules, parallel plans."""
+
+from repro.parallel.sharding import (
+    ParallelPlan,
+    param_shardings,
+    batch_shardings,
+    cache_shardings,
+    plan_for,
+)
+
+__all__ = [
+    "ParallelPlan",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "plan_for",
+]

@@ -1,0 +1,75 @@
+"""Activation-sharding context: anchors SPMD propagation inside models.
+
+Model code is mesh-agnostic; step builders install a context
+(``sharding_ctx``) and the model calls ``shard_batch(x)`` at layer
+boundaries. Without these anchors XLA may choose contraction-parallel
+layouts when FSDP shards a weight's contracting dim — replicating the
+batch across the data axis (observed on arctic: 16x redundant attention).
+With the anchor, the partitioner must keep activations batch-sharded and
+therefore all-gathers weights per layer (true FSDP semantics).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+def _axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@contextmanager
+def sharding_ctx(mesh: Optional[Mesh], **options):
+    prev = getattr(_TLS, "mesh", None)
+    prev_opt = getattr(_TLS, "options", {})
+    _TLS.mesh = mesh
+    _TLS.options = options
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+        _TLS.options = prev_opt
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_TLS, "mesh", None)
+
+
+def ctx_option(name: str, default=None):
+    return getattr(_TLS, "options", {}).get(name, default)
+
+
+def dp_shard_count() -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in _axes(mesh)])) if _axes(mesh) else 1
+
+
+def shard_batch(x):
+    """Constrain dim 0 (batch/rows) of an activation to the dp axes."""
+    mesh = current_mesh()
+    if mesh is None or not hasattr(x, "shape") or x.ndim < 1:
+        return x
+    axes = _axes(mesh)
+    if not axes:
+        return x
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    if n <= 1 or x.shape[0] % n != 0:
+        # try the in-pod data axis alone
+        if "data" in axes and x.shape[0] % mesh.shape["data"] == 0 \
+                and mesh.shape["data"] > 1:
+            spec = P("data", *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,323 @@
+"""Sharding rules: param-tree paths -> PartitionSpec on the production mesh.
+
+Mesh axes (see ``repro.launch.mesh``): optional ``pod`` (cross-pod data
+parallel), ``data`` (in-pod data parallel / FSDP / sequence), ``model``
+(tensor/expert parallel).
+
+Parallelism modes composed here:
+- TP: heads / ffn / vocab / experts / d_inner -> "model".
+- DP: batch -> ("pod", "data").
+- FSDP (ZeRO-3): the non-TP weight axis additionally -> ("pod", "data")
+  for large archs (plan.fsdp), giving per-layer all-gathers under scan.
+- ZeRO-1/2: optimizer state and grad-accumulators inherit param shardings
+  (+ FSDP axis), so state bytes scale 1/chips.
+- SP: long-context decode shards global-layer KV caches over "data"
+  (distributed flash-decode: XLA inserts the partial-softmax combine).
+- EP: MoE expert dim of the [E, C, d] dispatch buffer -> "model"
+  (all-to-all at dispatch/combine).
+
+A rule maps a param-path suffix to axis names per tensor dim; divisibility
+is checked against the mesh and falls back to replication per-axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+DP_AXES = ("pod", "data")  # flattened data-parallel axes (pod may be absent)
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """Per-(arch x shape) distribution decisions."""
+
+    fsdp: bool = False            # shard weights' non-TP axis over data
+    microbatches: int = 1         # grad-accumulation steps in train_step
+    seq_shard_cache: bool = False # long-context: shard KV cache seq over data
+    shard_activation_seq: bool = False  # Megatron-SP style boundary sharding
+    remat_policy: str = "nothing" # "nothing" | "dots" (perf knob)
+    optimizer: str = "adamw"      # "adamw" | "adafactor" (fits 100B+ on v5e)
+    grad_accum_dtype: str = "f32" # "f32" | "bf16" (perf knob: halves accum traffic)
+    attn_chunk_threshold: int = 0 # >0: override chunked-attention threshold
+    moe_local_dispatch: bool = False  # shard-local dispatch + explicit A2A
+    no_ep: bool = False           # replicate experts (small-expert archs):
+                                  # routing stays shard-local, zero A2A
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def tp_size(mesh: Mesh) -> int:
+    return int(mesh.shape["model"])
+
+
+def _fits(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+# --------------------------------------------------------------------- rules
+# (path regex, per-dim logical axes). Dims counted from the END of the shape
+# so the leading scan/stack [L] dim never matters. Tokens: "tp" (model),
+# "fsdp" (data axes when plan.fsdp), None (replicated).
+_PARAM_RULES = [
+    (r"embed$", ("tp", "fsdp")),              # [V, d] vocab-parallel
+    (r"lm_head$", ("fsdp", "tp")),            # [d, V]
+    (r"frontend_proj$", (None, "tp")),
+    (r"attn/wq$", ("fsdp", "tp", None)),      # [d, nh, hd]
+    (r"attn/wk$", ("fsdp", "tp", None)),
+    (r"attn/wv$", ("fsdp", "tp", None)),
+    (r"attn/wo$", ("tp", None, "fsdp")),      # [nh, hd, d]
+    (r"cross/wq$", ("fsdp", "tp", None)),
+    (r"cross/wk$", ("fsdp", "tp", None)),
+    (r"cross/wv$", ("fsdp", "tp", None)),
+    (r"cross/wo$", ("tp", None, "fsdp")),
+    (r"(attn|cross)/b[qkv]$", ("tp", None)),
+    (r"mlp/w_gate$", ("fsdp", "tp")),         # [d, f]
+    (r"mlp/w_up$", ("fsdp", "tp")),
+    (r"mlp/w_down$", ("tp", "fsdp")),         # [f, d]
+    (r"dense_mlp/w_gate$", ("fsdp", "tp")),
+    (r"dense_mlp/w_up$", ("fsdp", "tp")),
+    (r"dense_mlp/w_down$", ("tp", "fsdp")),
+    (r"moe/router$", ("fsdp", None)),         # [d, E]
+    (r"moe/w_gate$", ("ep", "fsdp", "tp_ff")),  # [E, d, f]
+    (r"moe/w_up$", ("ep", "fsdp", "tp_ff")),
+    (r"moe/w_down$", ("ep", "tp_ff", "fsdp")),  # [E, f, d]
+    (r"ssm/in_proj$", ("fsdp", "tp")),        # [d, 2di]
+    (r"ssm/conv_w$", (None, "tp")),           # [K, di]
+    (r"ssm/conv_b$", ("tp",)),
+    (r"ssm/x_proj$", ("tp", None)),           # [di, dtr+2n]
+    (r"ssm/dt_proj_w$", (None, "tp")),        # [dtr, di]
+    (r"ssm/dt_proj_b$", ("tp",)),
+    (r"ssm/A_log$", ("tp", None)),            # [di, N]
+    (r"ssm/D$", ("tp",)),
+    (r"ssm/out_proj$", ("tp", "fsdp")),       # [di, d]
+    (r"norm", (None,)),                        # any norm scale: replicated
+]
+
+
+def _path_str(path) -> str:
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(str(k.key))
+        elif hasattr(k, "idx"):
+            keys.append(str(k.idx))
+        else:
+            keys.append(str(k))
+    return "/".join(keys)
+
+
+def _resolve_axis(token: Optional[str], dim: int, mesh: Mesh,
+                  plan: ParallelPlan):
+    if token is None:
+        return None
+    if token == "tp" or token == "ep" or token == "tp_ff":
+        # EP shards experts on "model"; tp_ff is the fallback for the expert
+        # ffn dims (unused when "ep" applies — only one of them gets "model").
+        if plan.no_ep and token in ("ep", "tp_ff"):
+            return None  # fully replicated experts (dispatch stays local)
+        return "model" if _fits(dim, tp_size(mesh)) else None
+    if token == "fsdp":
+        if not plan.fsdp:
+            return None
+        axes = dp_axes(mesh)
+        return axes if _fits(dim, dp_size(mesh)) else None
+    raise ValueError(token)
+
+
+def spec_for_param(path_s: str, shape: Tuple[int, ...], mesh: Mesh,
+                   plan: ParallelPlan) -> P:
+    for pat, tokens in _PARAM_RULES:
+        if re.search(pat, path_s):
+            ndims = len(shape)
+            spec: list = [None] * ndims
+            offset = ndims - len(tokens)  # leading [L] stack dims replicated
+            if offset < 0:
+                return P()
+            used = set()
+            ep_applied = any(
+                t == "ep" and _fits(shape[offset + i], tp_size(mesh))
+                for i, t in enumerate(tokens)
+            )
+            for i, tok in enumerate(tokens):
+                if tok == "tp_ff" and ep_applied:
+                    continue  # experts already consume the model axis
+                if tok == "ep" and not ep_applied:
+                    continue
+                ax = _resolve_axis(tok, shape[offset + i], mesh, plan)
+                if ax is None:
+                    continue
+                flat = ax if isinstance(ax, tuple) else (ax,)
+                if any(a in used for a in flat):
+                    continue  # an axis may shard only one dim
+                used.update(flat)
+                spec[offset + i] = ax
+            return P(*spec)
+    return P()
+
+
+def param_shardings(mesh: Mesh, plan: ParallelPlan, params_shape) -> Any:
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+
+    def one(path, leaf):
+        return NamedSharding(mesh, spec_for_param(_path_str(path), leaf.shape,
+                                                  mesh, plan))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ----------------------------------------------------------------- activations
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    axes = [a for a in dp_axes(mesh)]
+    # use the largest prefix of (pod, data) that divides the batch
+    while axes and batch_size % int(np.prod([mesh.shape[a] for a in axes])):
+        axes.pop()
+    return P(tuple(axes)) if axes else P()
+
+
+def batch_shardings(mesh: Mesh, batch_tree) -> Any:
+    def one(leaf):
+        return NamedSharding(mesh, batch_spec(mesh, leaf.shape[0]))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, plan: ParallelPlan, cfg: ModelConfig,
+                    cache_tree) -> Any:
+    """KV/SSM cache shardings for serving.
+
+    kv k/v: [B, S, nkv, hd] — B over dp if divisible; else (long-context
+    batch=1) S over "data" when plan.seq_shard_cache; nkv over "model" when
+    divisible. ssm h: [B, di, N] — di over "model". conv: [B, K-1, di]."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if re.search(r"kv/(k|v)$", ps) or re.search(r"cross_kv", ps):
+            # [B, S, nkv, hd] or stacked [L, B, S, nkv, hd]
+            off = len(shape) - 4
+            if off < 0:
+                return NamedSharding(mesh, P())
+            b, s, nkv = shape[off], shape[off + 1], shape[off + 2]
+            spec = [None] * len(shape)
+            baxes = batch_spec(mesh, b)
+            spec[off] = baxes[0] if len(baxes) else None
+            if (spec[off] is None and plan.seq_shard_cache
+                    and _fits(s, mesh.shape["data"])):
+                spec[off + 1] = "data"  # SP: distributed flash-decode
+            if _fits(nkv, tp_size(mesh)):
+                spec[off + 2] = "model"
+            elif _fits(s, tp_size(mesh)) and spec[off + 1] is None:
+                # kv heads don't divide TP (arctic/command-r/mistral kv=8,
+                # hymba kv=5): shard the sequence dim over "model" instead —
+                # decode attends to a partial KV range per chip and XLA
+                # combines the partial softmax (flash-decode style). Applies
+                # whether or not the batch dim is also data-sharded.
+                spec[off + 1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if re.search(r"ssm/h$", ps):
+            # [B, di, N] or stacked [L, B, di, N]
+            off = len(shape) - 3
+            spec = [None] * len(shape)
+            baxes = batch_spec(mesh, shape[off])
+            spec[off] = baxes[0] if len(baxes) else None
+            if _fits(shape[off + 1], tp_size(mesh)):
+                spec[off + 1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if re.search(r"ssm/conv$", ps):
+            # [B, K-1, di] or stacked [L, B, K-1, di]
+            off = len(shape) - 3
+            spec = [None] * len(shape)
+            baxes = batch_spec(mesh, shape[off])
+            spec[off] = baxes[0] if len(baxes) else None
+            if _fits(shape[off + 2], tp_size(mesh)):
+                spec[off + 2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def expert_sharder(mesh: Mesh):
+    """Sharding constraint for the MoE [E, C, d] dispatch buffer (EP)."""
+
+    def shard(buf):
+        e = buf.shape[0]
+        if _fits(e, tp_size(mesh)):
+            return jax.lax.with_sharding_constraint(
+                buf, NamedSharding(mesh, P("model", None, None)))
+        return buf
+
+    return shard
+
+
+def activation_seq_sharder(mesh: Mesh, plan: ParallelPlan):
+    """Megatron-SP style: shard the sequence dim of layer-boundary
+    activations over "model" (they are all-gathered inside the block)."""
+
+    if not plan.shard_activation_seq:
+        return None
+
+    def shard(x):  # x: [B, T, d]
+        if x.ndim == 3 and _fits(x.shape[1], tp_size(mesh)):
+            baxes = batch_spec(mesh, x.shape[0])
+            b0 = baxes[0] if len(baxes) else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(b0, "model", None)))
+        return x
+
+    return shard
+
+
+# --------------------------------------------------------------------- plans
+# Parameter-count driven defaults; overridable per arch in launch configs.
+def plan_for(cfg: ModelConfig, shape_name: str, mesh: Mesh) -> ParallelPlan:
+    """Defaults bake in the confirmed §Perf iterations (EXPERIMENTS.md):
+    shard-local MoE dispatch (kills the scatter all-reduce), expert
+    replication for small-expert MoE (no_ep), bf16 grad accumulation."""
+    params_b = cfg.param_count() * 2  # bf16 bytes
+    n_dev = mesh.size
+    big = params_b / n_dev > 2e9  # > ~2 GB/device of raw weights under TP-only
+    # total expert weight bytes decide EP vs replication (§Perf cell 2)
+    expert_b = (cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff * 2
+                if cfg.family == "moe" else 0)
+    is_decode = shape_name in ("decode_32k", "long_500k")
+    no_ep = cfg.family == "moe" and expert_b < 30e9
+    plan = ParallelPlan(
+        # no_ep replicates expert weights -> FSDP-shard them for memory
+        fsdp=big or params_b > 60e9 * 2 or no_ep,
+        microbatches=1,
+        optimizer="adafactor" if params_b > 200e9 * 2 else "adamw",
+        grad_accum_dtype="bf16",
+        # local dispatch pays off when each dp shard carries enough tokens;
+        # decode steps (<= a few tokens/shard) keep the global path
+        moe_local_dispatch=cfg.family == "moe" and not is_decode,
+        no_ep=no_ep,
+    )
+    if shape_name == "train_4k":
+        gb = 256
+        if cfg.family == "moe":
+            # confirmed §Perf knee: bigger microbatches give each dp shard
+            # enough tokens for efficient dispatch (arctic it4/it5, olmoe it6)
+            micro = 4 if no_ep else 8
+        else:
+            # per-device microbatch of 1 row keeps scan-carry activations small
+            micro = max(1, gb // dp_size(mesh))
+        plan = dataclasses.replace(plan, microbatches=micro)
+    if shape_name == "long_500k":
+        plan = dataclasses.replace(plan, seq_shard_cache=True)
+    return plan

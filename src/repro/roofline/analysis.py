@@ -1,0 +1,147 @@
+"""Three-term roofline from the compiled dry-run.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` provides HLO_FLOPs / bytes (whole-program, i.e. summed
+over all chips' SPMD program x chips — XLA reports per-program; we treat
+it as per-chip since the SPMD program IS the per-chip program).
+Collective bytes are parsed from the compiled HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op's result shape, weighted by the standard ring-algorithm wire factors:
+
+    all-gather      (n-1)/n x output bytes
+    reduce-scatter  (n-1)/n x input bytes
+    all-reduce      2(n-1)/n x bytes        (RS + AG)
+    all-to-all      (n-1)/n x bytes
+    collective-permute 1 x bytes
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "tuple": 0, "token": 0, "opaque": 0,
+}
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9       # bytes/s / chip
+    ici_bw: float = 50e9        # bytes/s / link
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Bytes of 'bf16[128,4096]' or tuple '(bf16[2], f32[4])'."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Parse compiled HLO; sum wire bytes per collective kind.
+
+    Group size n is taken from replica_groups when present (iota form
+    [groups,n] or explicit lists); wire factors per docstring."""
+    per_kind: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        if "-done(" in line:
+            continue  # bytes counted at -start (async pairs)
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        # group size
+        n = None
+        gm = _GROUPS_SHAPE_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_RE.search(line)
+            if gm2 and gm2.group(1).strip():
+                first = gm2.group(1).split("}")[0].strip("{} ")
+                n = len([x for x in first.split(",") if x.strip() != ""])
+        if not n or n <= 1:
+            n = 2  # conservative floor when groups are implicit
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2 * frac * nbytes
+        elif kind == "collective-permute":
+            wire = nbytes
+        else:
+            wire = frac * nbytes
+        per_kind[kind] = per_kind.get(kind, 0.0) + wire
+        count[kind] = count.get(kind, 0) + 1
+    total = sum(per_kind.values())
+    return {"total_wire_bytes": total, "per_kind": per_kind, "count": count}
+
+
+def model_flops(kind: str, cfg, shape: Dict[str, Any]) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.active_param_count()
+    batch, seq = shape["batch"], shape["seq"]
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n * tokens
+    return 2.0 * n * batch  # decode: one token per sequence
+
+
+def roofline_report(kind: str, cfg, shape: Dict[str, Any], n_chips: int,
+                    flops: float, bytes_accessed: float,
+                    coll: Dict[str, Any], hw: HW = HW()) -> Dict[str, Any]:
+    """cost_analysis numbers are for the per-chip SPMD program."""
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_accessed / hw.hbm_bw
+    t_coll = (coll.get("total_wire_bytes", 0.0)) / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(kind, cfg, shape)
+    useful = mf / (flops * n_chips) if flops else 0.0
+    bound = max(t_compute, t_memory, t_coll)
+    mfu_bound = (mf / n_chips / hw.peak_flops) / bound if bound else 0.0
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_per_chip": flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": mfu_bound,  # model-FLOPs utilisation bound
+    }

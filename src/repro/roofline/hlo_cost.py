@@ -1,0 +1,327 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — under
+scan-over-layers (a `while` loop) it reports one layer body instead of
+L x M executions, making FLOPs/bytes/collectives wrong by orders of
+magnitude. This module re-derives the three roofline inputs from the HLO
+text with loop trip counts applied:
+
+- splits the module into computations and builds a per-computation symbol
+  table (header params + op definitions) so operand shapes resolve even
+  though the compiled print omits them at use sites;
+- extracts each while loop's trip count from its condition region
+  (jax scans lower to `lt(i, constant)` inductions; the bound is the
+  largest s32 constant in the region);
+- walks the call tree multiplying costs by trip counts:
+    * dot FLOPs: 2 x numel(result) x contracted lhs dims,
+    * bytes accessed: operand + result bytes per op, skipping
+      data-movement-free ops (tuple/GTE/parameter/bitcast/constant) —
+      fusions count their boundary tensors once, matching
+      cost_analysis semantics,
+    * collective wire bytes with ring-algorithm factors:
+        all-gather/all-to-all: (n-1)/n x full buffer
+        reduce-scatter:        (n-1)/n x full (pre-scatter) buffer
+        all-reduce:            2(n-1)/n x buffer
+        collective-permute:    1 x buffer.
+
+All numbers describe the per-chip SPMD program.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_PARAM_DECL = re.compile(r"([\w\.\-]+):\s*(\([^)]*\)|[a-z]\d*[a-z0-9]*\[[\d,]*\])")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"^(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "opt-barrier", "custom-call",  # custom-call: layout markers on CPU
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_TOKEN.finditer(shape_str):
+        b = _DTYPE_BYTES.get(m.group(1))
+        if b:
+            total += _numel(m.group(2)) * b
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    result_shape: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_per_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)
+    calls: List[str] = field(default_factory=list)
+
+
+class _Computation:
+    def __init__(self, name: str, header: str, lines: List[str]):
+        self.name = name
+        self.lines = lines
+        self.symtab: Dict[str, str] = {}
+        for m in _PARAM_DECL.finditer(header):
+            self.symtab[m.group(1)] = m.group(2)
+        self.ops: List[_Op] = []
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name_, rhs = dm.group(1), dm.group(2)
+            rhs = rhs.strip()
+            # result shape: tuple "(...)" (may contain /*index=N*/ comments)
+            # or a single token; find it by paren balancing.
+            if rhs.startswith("("):
+                depth, i = 0, 0
+                for i, ch in enumerate(rhs):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                result_shape = rhs[: i + 1]
+                rest = rhs[i + 1:].strip()
+            else:
+                sp = rhs.find(" ")
+                if sp < 0:
+                    continue
+                result_shape = rhs[:sp]
+                rest = rhs[sp + 1:].strip()
+            om = re.match(r"([\w\-]+)\(", rest)
+            if not om:
+                continue
+            opname = om.group(1)
+            self.symtab[name_] = result_shape
+            operand_str = rest[om.end() - 1:]
+            # cut trailing attributes for operand scan (operands come first)
+            operands = _OPERAND_RE.findall(
+                operand_str.split("metadata=")[0].split("calls=")[0]
+                .split("to_apply=")[0].split("condition=")[0])
+            self.ops.append(_Op(name_, opname, result_shape, operands, line))
+
+    def shape_of(self, sym: str) -> str:
+        return self.symtab.get(sym, "")
+
+
+def _group_size(line: str) -> int:
+    gm = _GROUPS_SHAPE_RE.search(line)
+    if gm:
+        return int(gm.group(2))
+    gl = _GROUPS_LIST_RE.search(line)
+    if gl:
+        return len([x for x in gl.group(1).split(",") if x.strip()])
+    return 2  # conservative floor when groups are implicit
+
+
+def _collective_wire(op: _Op, comp: _Computation) -> float:
+    kind = op.kind.replace("-start", "")
+    n = _group_size(op.line)
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    rbytes = _shape_bytes(op.result_shape)
+    if kind == "all-reduce":
+        return 2 * frac * rbytes
+    if kind == "collective-permute":
+        return rbytes
+    if kind == "all-gather":
+        return frac * rbytes  # result = gathered buffer
+    if kind == "reduce-scatter":
+        # result = shard; wire = (n-1)/n x full input
+        in_bytes = sum(_shape_bytes(comp.shape_of(o)) for o in op.operands)
+        return frac * (in_bytes if in_bytes else rbytes * n)
+    if kind == "all-to-all":
+        return frac * rbytes
+    return 0.0
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    if not op.operands:
+        return 0.0
+    lhs_shape = comp.shape_of(op.operands[0])
+    sm = _SHAPE_TOKEN.search(lhs_shape)
+    if not sm:
+        return 0.0
+    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    contract = 1
+    mc = _LHS_CONTRACT_RE.search(op.line)
+    if mc:
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * _shape_bytes(op.result_shape) / max(
+        _DTYPE_BYTES.get(_SHAPE_TOKEN.search(op.result_shape).group(1), 1), 1
+    ) * contract
+
+
+def _split(hlo: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    cur_name: Optional[str] = None
+    cur_header = ""
+    cur_lines: List[str] = []
+    header_re = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(\(.*)$")
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("->" in line) and "{" in line:
+            m = header_re.match(line)
+            if m:
+                cur_name = m.group(2)
+                cur_header = m.group(3)
+                cur_lines = []
+                if m.group(1):
+                    entry = cur_name
+                continue
+        if line.strip() == "}":
+            if cur_name is not None:
+                comps[cur_name] = _Computation(cur_name, cur_header, cur_lines)
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return comps, entry
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = _split(hlo_text)
+        self.raw: Dict[str, CompCost] = {}
+        for name, comp in self.comps.items():
+            c = CompCost()
+            for op in comp.ops:
+                base_kind = op.kind.replace("-start", "").replace("-done", "")
+                if op.kind == "while":
+                    wm = _WHILE_RE.search(op.line)
+                    if wm:
+                        c.whiles.append((wm.group(1), wm.group(2)))
+                    continue
+                if base_kind in _COLLECTIVES:
+                    if op.kind.endswith("-done"):
+                        continue
+                    wire = _collective_wire(op, comp)
+                    c.coll_bytes += wire
+                    c.coll_per_kind[base_kind] = c.coll_per_kind.get(base_kind, 0.0) + wire
+                    c.coll_count[base_kind] = c.coll_count.get(base_kind, 0) + 1
+                    # collective still moves HBM bytes locally
+                    c.bytes += _shape_bytes(op.result_shape)
+                    continue
+                cm = _CALL_RE.search(op.line)
+                if cm:
+                    c.calls.append(cm.group(1))
+                if op.kind == "dot":
+                    c.flops += _dot_flops(op, self.comps[name])
+                if op.kind in _FREE_OPS:
+                    continue
+                nbytes = _shape_bytes(op.result_shape)
+                for o in op.operands:
+                    nbytes += _shape_bytes(self.comps[name].shape_of(o))
+                c.bytes += nbytes
+            self.raw[name] = c
+        self._memo: Dict[str, Tuple[float, float, float, Dict[str, float], Dict[str, int]]] = {}
+
+    def _trip(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        consts = []
+        for line in comp.lines:
+            for m in _CONST_RE.finditer(line):
+                consts.append(int(m.group(1)))
+        return max(consts) if consts else 1
+
+    def _resolve(self, name: str, depth: int = 0):
+        if name in self._memo:
+            return self._memo[name]
+        if depth > 64 or name not in self.raw:
+            return (0.0, 0.0, 0.0, {}, {})
+        c = self.raw[name]
+        flops, nbytes, coll = c.flops, c.bytes, c.coll_bytes
+        per_kind = dict(c.coll_per_kind)
+        counts = dict(c.coll_count)
+        for callee in c.calls:
+            f2, _, c2, pk2, ct2 = self._resolve(callee, depth + 1)
+            flops += f2
+            coll += c2
+            for k, v in pk2.items():
+                per_kind[k] = per_kind.get(k, 0.0) + v
+            for k, v in ct2.items():
+                counts[k] = counts.get(k, 0) + v
+        for cond, body in c.whiles:
+            trip = self._trip(cond)
+            f2, b2, c2, pk2, ct2 = self._resolve(body, depth + 1)
+            flops += trip * f2
+            nbytes += trip * b2
+            coll += trip * c2
+            for k, v in pk2.items():
+                per_kind[k] = per_kind.get(k, 0.0) + trip * v
+            for k, v in ct2.items():
+                counts[k] = counts.get(k, 0) + trip * v
+        out = (flops, nbytes, coll, per_kind, counts)
+        self._memo[name] = out
+        return out
+
+    def entry_cost(self) -> Dict[str, object]:
+        entry = self.entry
+        if entry is None and self.raw:
+            entry = max(self.raw, key=lambda n: self.raw[n].bytes)
+        flops, nbytes, coll, per_kind, counts = self._resolve(entry)
+        return {
+            "flops": flops,
+            "bytes_accessed": nbytes,
+            "collective_wire_bytes": coll,
+            "collective_per_kind": per_kind,
+            "collective_counts": counts,
+            "entry": entry,
+        }
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, object]:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,5 @@
+"""Serving substrate: KV/SSM caches, prefill/decode steps, batch engine."""
+
+from repro.serve.engine import make_prefill_step, make_decode_step
+
+__all__ = ["make_prefill_step", "make_decode_step"]

@@ -1,0 +1,90 @@
+"""Serving steps + a minimal batched serving loop.
+
+``make_prefill_step`` / ``make_decode_step`` return pure functions for
+``jax.jit`` lowering: prefill consumes the prompt and fills per-layer
+caches (ring buffers for local-attention layers); decode advances one
+token for the whole batch. ``ServeLoop`` is the batched request driver
+used by ``examples/serve_small.py``: greedy sampling, round-based
+continuous batching with slot recycling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+from repro.parallel.ctx import sharding_ctx
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, **ctx_opts) -> Callable:
+    def prefill_step(params, batch, cache):
+        with sharding_ctx(mesh, **ctx_opts):
+            return prefill(cfg, params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, **ctx_opts) -> Callable:
+    def serve_step(params, tokens, cache, t):
+        with sharding_ctx(mesh, **ctx_opts):
+            logits, new_cache = decode_step(cfg, params, tokens, cache, t)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_cache
+
+    return serve_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray  # [T] int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    """Small continuous-batching loop (slot-per-request, greedy)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
+                 max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.decode = jax.jit(make_decode_step(cfg))
+        self.prefill = jax.jit(make_prefill_step(cfg))
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve requests in waves of `slots` (simple admission policy)."""
+        results: Dict[int, List[int]] = {}
+        queue = list(requests)
+        while queue:
+            wave = queue[: self.slots]
+            queue = queue[len(wave):]
+            # pad the wave to full slots by repeating the last prompt
+            prompts = [r.prompt for r in wave]
+            T = max(p.shape[0] for p in prompts)
+            toks = jnp.stack([
+                jnp.pad(p, (T - p.shape[0], 0)) for p in prompts
+            ] + [jnp.zeros((T,), jnp.int32)] * (self.slots - len(wave)))
+            cache = init_cache(self.cfg, self.slots, self.max_len)
+            logits, cache = self.prefill(self.params, {"tokens": toks}, cache)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            t = T
+            max_new = max(r.max_new for r in wave)
+            outs = [cur]
+            for _ in range(max_new - 1):
+                cur, _, cache = self.decode(self.params, cur, cache,
+                                            jnp.int32(t))
+                outs.append(cur)
+                t += 1
+            gen = jnp.concatenate(outs, axis=1)
+            for i, r in enumerate(wave):
+                results[r.rid] = [int(x) for x in gen[i][: r.max_new]]
+        return results

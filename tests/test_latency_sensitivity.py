@@ -1,0 +1,52 @@
+"""Paper §5.4 tape-latency sensitivity (reduced scale).
+
+The paper: random normal access latency 30±10 min barely changes any
+configuration; raising the mean to 60 min (±15) cuts configuration II's
+finished jobs by ≈20 % while I and III lose only 2–4 % (the cloud cache
+insulates job throughput from tape latency).
+"""
+
+import pytest
+
+from repro.core.hcdc import HCDCScenario, make_config
+from repro.sim.engine import DAY, MINUTE
+
+DAYS, FILES = 3, 15_000
+
+
+def _run(name, mean_min, sigma_min=0.0, seed=21):
+    cfg = make_config(name, simulated_time=DAYS * DAY,
+                      n_files_per_site=FILES, seed=seed)
+    cfg.tape_latency = mean_min * MINUTE
+    cfg.tape_latency_sigma = sigma_min * MINUTE
+    return HCDCScenario(cfg).run()["jobs_done"]
+
+
+@pytest.fixture(scope="module")
+def jobs():
+    out = {}
+    for name in ("II", "III"):
+        out[name, 30] = _run(name, 30)
+        out[name, 60] = _run(name, 60, 15.0)
+    return out
+
+
+def test_latency_hurts_cfg_ii_most(jobs):
+    drop_ii = 1 - jobs["II", 60] / jobs["II", 30]
+    drop_iii = 1 - jobs["III", 60] / jobs["III", 30]
+    # cfg II (no cloud cache) must be hit substantially harder
+    assert drop_ii > drop_iii + 0.02
+    assert drop_ii > 0.05
+
+
+def test_cloud_cache_insulates_throughput(jobs):
+    # cfg III loses only a few percent even at doubled latency (paper: ~4 %)
+    drop_iii = 1 - jobs["III", 60] / jobs["III", 30]
+    assert drop_iii < 0.08
+
+
+def test_random_latency_30_noop():
+    """30±10 min random latency ~= constant 30 min (paper §5.4)."""
+    j_const = _run("III", 30, 0.0)
+    j_rand = _run("III", 30, 10.0)
+    assert abs(j_rand - j_const) / j_const < 0.02

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (required deliverable f).
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs one forward + one train step on CPU, asserting output shapes and
+finite values.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config, get_smoke_config
+from repro.launch.mesh import make_debug_mesh
+from repro.models import forward, init_params, loss_fn
+from repro.parallel.sharding import ParallelPlan
+from repro.train.train_step import make_train_step
+from repro.train.optimizer import make_optimizer
+
+B, T = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision":
+        batch["frontend"] = jnp.ones(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), cfg.dtype)
+    if cfg.is_enc_dec:
+        batch["enc_input"] = jnp.ones((B, 16, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, aux = forward(cfg, params, batch)
+    t_expected = T + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (B, t_expected, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_smoke_train_step_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    mesh = make_debug_mesh(1, 1)
+    plan = ParallelPlan(microbatches=1)
+    step = jax.jit(make_train_step(cfg, plan, mesh))
+    opt = make_optimizer(plan.optimizer)
+    opt_state = opt.init(params)
+    batch = _batch(cfg, key)
+    with mesh:
+        new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        new_params, params)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_full_config_param_counts(arch):
+    """Full configs expose the published scale (sanity band per arch)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    bands = {
+        "arctic_480b": (4e11, 5.5e11),
+        "olmoe_1b_7b": (5e9, 9e9),
+        "falcon_mamba_7b": (6e9, 9e9),
+        "command_r_35b": (3e10, 4.3e10),
+        "qwen3_4b": (3.0e9, 6e9),
+        "gemma3_27b": (2.2e10, 3.3e10),
+        "mistral_large_123b": (1.1e11, 1.4e11),
+        "hymba_1_5b": (1.2e9, 2.2e9),
+        "phi_3_vision_4_2b": (3.5e9, 4.8e9),
+        "seamless_m4t_large_v2": (1.2e9, 2.8e9),
+    }
+    lo, hi = bands[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+
+
+def test_loss_decreases_over_steps():
+    cfg = get_smoke_config("qwen3_4b")
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    mesh = make_debug_mesh(1, 1)
+    plan = ParallelPlan(microbatches=1)
+    step = jax.jit(make_train_step(cfg, plan, mesh))
+    opt = make_optimizer("adamw")
+    opt_state = opt.init(params)
+    batch = _batch(cfg, key)  # overfit one batch
+    losses = []
+    with mesh:
+        for _ in range(8):
+            params, opt_state, m = step(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_microbatched_matches_single_batch_grads():
+    """Grad accumulation (n_micro) must match the single-batch step."""
+    cfg = get_smoke_config("qwen3_4b")
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    mesh = make_debug_mesh(1, 1)
+    opt = make_optimizer("adamw")
+    batch = _batch(cfg, key)
+    outs = {}
+    for n_micro in (1, 2):
+        plan = ParallelPlan(microbatches=n_micro)
+        step = jax.jit(make_train_step(cfg, plan, mesh))
+        with mesh:
+            p2, _, m = step(params, opt.init(params), batch)
+        outs[n_micro] = (m["loss"], p2)
+    assert abs(float(outs[1][0]) - float(outs[2][0])) < 5e-2
+    d = jax.tree.map(lambda a, b: float(jnp.mean(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        outs[1][1], outs[2][1])
+    assert max(jax.tree.leaves(d)) < 5e-2

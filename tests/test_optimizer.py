@@ -1,0 +1,78 @@
+"""Optimizer + gradient-compression tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import (
+    OptConfig,
+    adafactor,
+    adamw,
+    compress_gradients,
+    make_optimizer,
+)
+
+
+def _quadratic_losses(opt, steps=60, lr=0.1):
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5]),
+              "b": jnp.asarray([[1.0, -1.0], [0.5, 2.0]])}
+    state = opt.init(params)
+    losses = []
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params)
+        losses.append(float(loss_fn(params)))
+    return losses
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizers_minimise_quadratic(name):
+    opt = make_optimizer(name, OptConfig(lr=0.05, weight_decay=0.0))
+    losses = _quadratic_losses(opt)
+    assert losses[-1] < 0.1 * losses[0]
+
+
+def test_adamw_moments_dtype_and_step():
+    opt = adamw()
+    params = {"w": jnp.ones((3,), jnp.bfloat16)}
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.float32
+    p2, st2 = opt.update({"w": jnp.ones((3,), jnp.bfloat16)}, st, params)
+    assert int(st2["step"]) == 1
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def test_adafactor_memory_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.ones((64, 128))}
+    st = opt.init(params)
+    stats = st["stats"]["w"]
+    assert "vr" in stats and "vc" in stats
+    assert stats["vr"].shape == (64,)
+    assert stats["vc"].shape == (128,)
+
+
+def test_compression_error_feedback_reduces_bias():
+    """With error feedback, the accumulated quantised sum converges to the
+    true sum (residual carried forward)."""
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32))}
+    err = None
+    total_q = jnp.zeros((256,))
+    for _ in range(50):
+        q, err = compress_gradients(g_true, err)
+        total_q = total_q + q["w"]
+    mean_q = total_q / 50
+    assert float(jnp.max(jnp.abs(mean_q - g_true["w"]))) < 0.01
+
+
+def test_compression_output_matches_scale():
+    g = {"w": jnp.asarray([1.0, -0.5, 0.25, 127.0])}
+    q, err = compress_gradients(g, None)
+    assert q["w"].shape == g["w"].shape
+    assert float(jnp.max(jnp.abs(q["w"] - g["w"]))) <= 127.0 / 127.0

@@ -1,0 +1,85 @@
+"""Sharding-rule unit tests (pure logic — duck-typed mesh, no devices)."""
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import ParallelPlan, spec_for_param
+
+
+class FakeMesh:
+    """Duck-typed stand-in: spec_for_param only reads shape/axis_names."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_embed_vocab_parallel():
+    spec = spec_for_param("embed", (151936, 2560), MESH1, ParallelPlan())
+    assert spec == P("model", None)
+
+
+def test_attention_heads_tp_when_divisible():
+    spec = spec_for_param("layers/attn/wq", (36, 2560, 32, 128), MESH1,
+                          ParallelPlan())
+    assert spec == P(None, None, "model", None)
+
+
+def test_attention_heads_replicated_when_not_divisible():
+    # arctic: 56 heads, model=16 -> replicate head dim
+    spec = spec_for_param("layers/attn/wq", (35, 7168, 56, 128), MESH1,
+                          ParallelPlan())
+    assert spec == P(None, None, None, None)
+
+
+def test_fsdp_adds_data_axis():
+    plan = ParallelPlan(fsdp=True)
+    spec = spec_for_param("layers/attn/wq", (35, 7168, 56, 128), MESH1, plan)
+    assert spec == P(None, ("data",), None, None)
+    spec2 = spec_for_param("layers/attn/wq", (35, 7168, 56, 128), MESH2, plan)
+    assert spec2 == P(None, ("pod", "data"), None, None)
+
+
+def test_moe_experts_ep_sharded():
+    spec = spec_for_param("layers/moe/w_gate", (35, 128, 7168, 4864), MESH1,
+                          ParallelPlan())
+    assert spec == P(None, "model", None, None)
+
+
+def test_moe_ffn_tp_fallback_when_experts_not_divisible():
+    # 12 experts % 16 != 0 -> model axis falls through to the ffn dim
+    spec = spec_for_param("layers/moe/w_gate", (4, 12, 256, 512), MESH1,
+                          ParallelPlan())
+    assert spec == P(None, None, None, "model")
+
+
+def test_ssm_d_inner_tp():
+    spec = spec_for_param("layers/ssm/out_proj", (64, 8192, 4096), MESH1,
+                          ParallelPlan())
+    assert spec == P(None, "model", None)
+
+
+def test_norms_replicated():
+    for path in ("layers/norm1", "final_norm", "layers/norm_attn_out"):
+        spec = spec_for_param(path, (64, 4096), MESH1, ParallelPlan())
+        assert spec == P(*([None] * 2)) or spec == P(None, None)
+
+
+def test_axis_used_once():
+    # mlp w_down [f, d] with fsdp: tp on f, data on d — never the same axis
+    plan = ParallelPlan(fsdp=True)
+    spec = spec_for_param("layers/mlp/w_down", (36, 9728, 2560), MESH1, plan)
+    assert spec == P(None, "model", ("data",))
+
+
+def test_opt_state_paths_match_param_rules():
+    spec = spec_for_param("m/layers/mlp/w_gate", (36, 2560, 9728), MESH1,
+                          ParallelPlan(fsdp=True))
+    assert spec == P(None, ("data",), "model")

@@ -1,0 +1,178 @@
+"""Engine + transfer-manager unit tests (paper §4.1)."""
+
+import numpy as np
+import pytest
+
+from repro.sim.engine import BaseSimulation, Schedulable, HOUR
+from repro.sim.infrastructure import (
+    File, NetworkLink, Site, StorageElement, GB, MB,
+)
+from repro.sim.transfer import (
+    BandwidthTransferManager,
+    DurationTransferManager,
+    EventDrivenTransferService,
+)
+
+
+class Ticker(Schedulable):
+    def __init__(self, interval):
+        super().__init__(interval=interval)
+        self.fired = []
+
+    def on_update(self, sim, now):
+        self.fired.append(now)
+
+
+def test_event_loop_ordering_and_intervals():
+    sim = BaseSimulation()
+    t = Ticker(10)
+    sim.schedule(t, 0)
+    order = []
+    sim.call_at(25, lambda s, n: order.append(("a", n)))
+    sim.call_at(5, lambda s, n: order.append(("b", n)))
+    sim.run(30)
+    assert t.fired == [0, 10, 20, 30]
+    assert order == [("b", 5), ("a", 25)]
+
+
+def test_cannot_schedule_in_past():
+    sim = BaseSimulation()
+    sim.call_at(10, lambda s, n: None)
+    sim.run(10)
+    with pytest.raises(ValueError):
+        sim.call_at(5, lambda s, n: None)
+
+
+def _make_link(throughput=None, bandwidth=None, max_active=None,
+               latency=0.0):
+    site = Site("s1")
+    src = StorageElement("SRC", site, access_latency=latency)
+    dst = StorageElement("DST", site)
+    return NetworkLink(src, dst, throughput=throughput, bandwidth=bandwidth,
+                       max_active=max_active), src, dst
+
+
+def test_event_driven_transfer_completion_time():
+    sim = BaseSimulation()
+    svc = EventDrivenTransferService(sim, np.random.default_rng(0))
+    link, src, dst = _make_link(throughput=10 * MB, latency=60.0)
+    f = File(1, 100 * MB)
+    src.add_complete_replica(f)
+    done_at = []
+    svc.submit(f, link, on_complete=lambda s, n, t: done_at.append(n))
+    sim.run(HOUR)
+    assert done_at == [70]  # 60 s latency + 10 s transfer
+    assert dst.has_complete(1)
+    assert link.traffic == f.size
+
+
+def test_max_active_queue_fifo():
+    sim = BaseSimulation()
+    svc = EventDrivenTransferService(sim, np.random.default_rng(0))
+    link, src, dst = _make_link(throughput=10 * MB, max_active=2)
+    order = []
+    for i in range(5):
+        f = File(i, 100 * MB)
+        src.add_complete_replica(f)
+        svc.submit(f, link, on_complete=lambda s, n, t: order.append(t.file.fid))
+    assert link.active == 2 and link.queued == 3
+    sim.run(HOUR)
+    assert order == [0, 1, 2, 3, 4]
+    assert link.active == 0 and link.queued == 0
+
+
+def test_queue_keying_not_shared_across_same_named_links():
+    """Regression: two sites' TAPE->DISK links must not share a queue."""
+    sim = BaseSimulation()
+    svc = EventDrivenTransferService(sim, np.random.default_rng(0))
+    l1, s1, _ = _make_link(throughput=10 * MB, max_active=1)
+    l2, s2, _ = _make_link(throughput=10 * MB, max_active=1)
+    assert l1.name == l2.name  # same names by construction
+    for i, (link, src) in enumerate([(l1, s1), (l2, s2)] * 2):
+        f = File(i, 50 * MB)
+        src.add_complete_replica(f)
+        svc.submit(f, link)
+    sim.run(HOUR)
+    assert l1.active == 0 and l2.active == 0
+    assert max(l1.queued, l2.queued) == 0
+
+
+def test_tick_manager_matches_event_driven_for_throughput_links():
+    """The analytic fast path must reproduce the tick engine's results."""
+    rng = np.random.default_rng(3)
+    sizes = rng.exponential(200 * MB, 40).clip(10 * MB, 2 * GB)
+
+    def run_tick():
+        sim = BaseSimulation()
+        mgr = BandwidthTransferManager(interval=1, rng=rng)
+        link, src, dst = _make_link(throughput=25 * MB, max_active=5)
+        times = {}
+        for i, sz in enumerate(sizes):
+            f = File(i, float(sz))
+            src.add_complete_replica(f)
+            mgr.submit(sim, f, link,
+                       on_complete=lambda s, n, t: times.__setitem__(t.file.fid, n))
+        sim.schedule(mgr, 0)
+        sim.run(6 * HOUR)
+        return times
+
+    def run_event():
+        sim = BaseSimulation()
+        svc = EventDrivenTransferService(sim, rng)
+        link, src, dst = _make_link(throughput=25 * MB, max_active=5)
+        times = {}
+        for i, sz in enumerate(sizes):
+            f = File(i, float(sz))
+            src.add_complete_replica(f)
+            svc.submit(f, link,
+                       on_complete=lambda s, n, t: times.__setitem__(t.file.fid, n))
+        sim.run(6 * HOUR)
+        return times
+
+    t_tick, t_event = run_tick(), run_event()
+    assert set(t_tick) == set(t_event)
+    # tick engine grants queued successors their slot only at tick
+    # boundaries, so each queue hop can lag up to 1 s; with 40 transfers
+    # over 5 slots the chain depth is 8 -> allow ~1 s per hop.
+    for fid in t_tick:
+        assert abs(t_tick[fid] - t_event[fid]) <= 12
+
+
+def test_bandwidth_sharing_divides_rate():
+    sim = BaseSimulation()
+    mgr = BandwidthTransferManager(interval=1)
+    link, src, dst = _make_link(bandwidth=100 * MB)
+    done = {}
+    for i in range(4):
+        f = File(i, 100 * MB)
+        src.add_complete_replica(f)
+        mgr.submit(sim, f, link,
+                   on_complete=lambda s, n, t: done.__setitem__(t.file.fid, n))
+    sim.schedule(mgr, 0)
+    sim.run(HOUR)
+    # 4 transfers share 100 MB/s -> each runs at 25 MB/s -> ~4 s
+    assert all(3 <= v <= 5 for v in done.values())
+
+
+def test_duration_manager_completes_on_schedule():
+    sim = BaseSimulation()
+    mgr = DurationTransferManager(duration=30, interval=1)
+    link, src, dst = _make_link(throughput=1 * MB)
+    f = File(1, 500 * MB)
+    src.add_complete_replica(f)
+    done = []
+    mgr.submit(sim, f, link, on_complete=lambda s, n, t: done.append(n))
+    sim.schedule(mgr, 0)
+    sim.run(100)
+    assert done and abs(done[0] - 30) <= 1
+
+
+def test_storage_element_limit_enforced():
+    site = Site("s")
+    se = StorageElement("DISK", site, limit=100 * MB)
+    se.add_complete_replica(File(1, 80 * MB))
+    assert not se.can_allocate(30 * MB)
+    with pytest.raises(RuntimeError):
+        se.allocate(File(2, 30 * MB))
+    se.delete(1)
+    assert se.used == 0

@@ -1,0 +1,63 @@
+"""Benchmark: batched scenario-sweep engine throughput (configs/sec).
+
+Times the same reduced-scale config grid twice — serially in-process and
+through the process pool — so the derived column shows both absolute
+configs/sec and the parallel speedup the sweep engine buys on this machine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Dict, List, Optional
+
+from repro.core.scenarios import expand_grid, with_seeds
+from repro.sim.sweep import run_sweep
+
+
+def _grid(n_configs: int, days: float, n_files: int):
+    cache = [20.0, 50.0, 100.0]
+    egress = ["internet", "direct", "interconnect"]
+    specs = expand_grid({"base": "III", "days": days, "n_files": n_files,
+                         "cache_tb": cache, "egress": egress})
+    seeds = max(1, -(-n_configs // len(specs)))  # ceil
+    return with_seeds(specs, seeds)[:n_configs]
+
+
+def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
+        workers: Optional[int] = None) -> List[Dict]:
+    specs = _grid(n_configs, days, n_files)
+    workers = workers or min(len(specs), os.cpu_count() or 1)
+    serial = run_sweep(specs, workers=1)
+    par = run_sweep(specs, workers=workers)
+    events = sum(r.events for r in serial.results)
+    rows = [
+        {"name": f"sweep.serial.{len(specs)}cfg",
+         "us_per_call": serial.wall_s / len(specs) * 1e6,
+         "derived": serial.configs_per_sec},
+        {"name": f"sweep.parallel{workers}.{len(specs)}cfg",
+         "us_per_call": par.wall_s / len(specs) * 1e6,
+         "derived": par.configs_per_sec},
+        {"name": "sweep.speedup",
+         "us_per_call": par.wall_s * 1e6,
+         "derived": serial.wall_s / par.wall_s if par.wall_s > 0 else 0.0},
+        {"name": "sweep.events_per_sec_serial",
+         "us_per_call": serial.wall_s * 1e6,
+         "derived": events / serial.wall_s if serial.wall_s > 0 else 0.0},
+    ]
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", type=int, default=8)
+    ap.add_argument("--days", type=float, default=0.25)
+    ap.add_argument("--files", type=int, default=4000)
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args()
+    for r in run(args.configs, args.days, args.files, args.workers):
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g}")
+
+
+if __name__ == "__main__":
+    main()

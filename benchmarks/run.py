@@ -7,10 +7,12 @@ columns where the paper provides reference values).
   table6/7 bench_hcdc         (jobs done, volumes for cfg I/II/III)
   table8   bench_cost         (monthly GCS cost, cfg III)
   hotloop  bench_tick_engine  (transfer-manager tick engines)
+  sweep    bench_sweep        (scenario-sweep engine, configs/sec)
   roofline bench_roofline     (dry-run roofline terms per cell)
 
 Env knobs: HCDC_RUNS (default 1), HCDC_DAYS (90), HCDC_FILES (1e6),
-VALIDATION_RUNS (2), FAST=1 (reduced scales for CI smoke).
+VALIDATION_RUNS (2), SWEEP_CONFIGS (8), FAST=1 (reduced scales for CI
+smoke).
 """
 
 from __future__ import annotations
@@ -50,6 +52,13 @@ def main() -> None:
     from benchmarks import bench_tick_engine
     for r in bench_tick_engine.run():
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.4g}",
+              flush=True)
+
+    from benchmarks import bench_sweep
+    sweep_cfgs = int(os.environ.get("SWEEP_CONFIGS", "4" if fast else "8"))
+    for r in bench_sweep.run(n_configs=sweep_cfgs,
+                             days=0.1 if fast else 0.25):
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g}",
               flush=True)
 
     from benchmarks import bench_roofline

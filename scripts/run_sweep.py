@@ -1,0 +1,162 @@
+"""Batched scenario sweep CLI (paper §5.3 decision workflow).
+
+Runs a grid of HCDC configurations in parallel and emits the cost vs.
+throughput table, its Pareto front, and optional per-seed aggregates.
+
+Grid from inline axes (comma-separated values expand the grid)::
+
+    PYTHONPATH=src python scripts/run_sweep.py \
+        --cache-tb 20,50,100 --egress internet,direct,interconnect \
+        --seeds 2 --days 1 --files 10000 --out results/sweep.csv
+
+or from a YAML/JSON spec file (see docs/simulation.md)::
+
+    PYTHONPATH=src python scripts/run_sweep.py --spec sweep.yaml
+
+Spec-file shape: top-level fixed fields plus either ``axes`` (mapping of
+spec field -> value or list, Cartesian product) or ``scenarios`` (explicit
+list of spec mappings).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.scenarios import EGRESS_OPTIONS, specs_from_mapping
+from repro.sim.output import write_csv
+from repro.sim.sweep import run_sweep
+
+
+def _floats(text: str) -> list:
+    """Comma list of floats; 'inf' = unlimited, 'base' = keep base config."""
+    out = []
+    for tok in text.split(","):
+        tok = tok.strip().lower()
+        out.append(None if tok == "base" else float(tok))
+    return out
+
+
+def _build_axes(args: argparse.Namespace) -> dict:
+    axes: dict = {
+        "base": args.base,
+        "days": args.days,
+        "n_files": args.files,
+        "seed": list(range(args.first_seed, args.first_seed + args.seeds)),
+        "curves": args.curves,
+    }
+    if args.cache_tb:
+        axes["cache_tb"] = _floats(args.cache_tb)
+    if args.gcs_tb:
+        axes["gcs_limit_tb"] = _floats(args.gcs_tb)
+    if args.egress:
+        axes["egress"] = [e.strip() for e in args.egress.split(",")]
+    if args.storage_price:
+        axes["storage_price"] = _floats(args.storage_price)
+    if args.rate_scale:
+        axes["job_rate_scale"] = _floats(args.rate_scale)
+    return axes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Batched HCDC scenario sweep (cost/throughput frontier)")
+    ap.add_argument("--spec", help="YAML/JSON sweep spec file (overrides axis flags)")
+    ap.add_argument("--base", default="III", choices=["I", "II", "III"],
+                    help="Table 5 base configuration (default III)")
+    ap.add_argument("--days", type=float, default=1.0, help="simulated days")
+    ap.add_argument("--files", type=int, default=10_000,
+                    help="files per site (catalogue size)")
+    ap.add_argument("--cache-tb", default="",
+                    help="comma list of per-site disk cache limits in TB "
+                         "('inf' unlimited, 'base' keep)")
+    ap.add_argument("--gcs-tb", default="",
+                    help="comma list of cold-tier limits in TB (0 disables)")
+    ap.add_argument("--egress", default="",
+                    help=f"comma list from {','.join(EGRESS_OPTIONS)}")
+    ap.add_argument("--storage-price", default="",
+                    help="comma list of USD/GB-month storage prices")
+    ap.add_argument("--rate-scale", default="",
+                    help="comma list of job-arrival-rate multipliers")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="replica seeds per config (default 1)")
+    ap.add_argument("--first-seed", type=int, default=0)
+    ap.add_argument("--curves", action="store_true",
+                    help="record Fig 6/8 time-series digests (JSON output)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes (default: all CPUs)")
+    ap.add_argument("--out", default="", help="write the full table as CSV")
+    ap.add_argument("--json", dest="json_out", default="",
+                    help="write table + series digests as JSON")
+    ap.add_argument("--pareto", default="", help="write the Pareto front as CSV")
+    ap.add_argument("--aggregate", default="",
+                    help="write the across-seed aggregate table as CSV")
+    ap.add_argument("--quiet", action="store_true", help="no per-config progress")
+    args = ap.parse_args(argv)
+
+    try:
+        if args.spec:
+            with open(args.spec) as f:
+                if args.spec.endswith((".yaml", ".yml")):
+                    import yaml
+
+                    try:
+                        doc = yaml.safe_load(f)
+                    except yaml.YAMLError as e:
+                        raise ValueError(f"invalid YAML in {args.spec}: {e}")
+                else:
+                    doc = json.load(f)
+            specs = specs_from_mapping(doc)
+        else:
+            specs = specs_from_mapping({"axes": _build_axes(args)})
+    except (ValueError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if not specs:
+        print("error: the grid expanded to 0 configs", file=sys.stderr)
+        return 2
+
+    workers = (min(len(specs), os.cpu_count() or 1)
+               if args.workers is None else args.workers)
+    print(f"sweep: {len(specs)} configs, "
+          f"workers={max(workers, 1)}", flush=True)
+
+    def progress(done, total, result):
+        if not args.quiet:
+            print(f"  [{done:3d}/{total}] {result.spec.label:55s} "
+                  f"jobs={result.jobs_done:8.0f} cost=${result.cost_usd:12,.2f}",
+                  flush=True)
+
+    result = run_sweep(specs, workers=args.workers, progress=progress)
+    print(f"done in {result.wall_s:.1f}s "
+          f"({result.configs_per_sec:.2f} configs/sec)")
+
+    front = result.pareto_front()
+    print(f"\nPareto front (min cost, max jobs) — {len(front)} of "
+          f"{len(result)} configs:")
+    for r in front:
+        print(f"  {r.spec.label:55s} jobs={r.jobs_done:8.0f} "
+              f"cost=${r.cost_usd:12,.2f} (${1e3 * r.cost_usd / max(r.jobs_done, 1):,.2f}/kjob)")
+
+    if args.out:
+        result.to_csv(args.out)
+        print(f"\nwrote {args.out} ({len(result)} rows)")
+    if args.json_out:
+        result.to_json(args.json_out)
+        print(f"wrote {args.json_out}")
+    if args.pareto:
+        result.pareto_to_csv(args.pareto)
+        print(f"wrote {args.pareto} ({len(front)} rows)")
+    if args.aggregate:
+        rows = result.aggregate_seeds()
+        write_csv(args.aggregate, rows)
+        print(f"wrote {args.aggregate} ({len(rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

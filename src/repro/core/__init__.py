@@ -7,10 +7,19 @@
   configurations I/II/III of Table 5).
 - ``validation``: the §4.2 simulation-correctness scenario (Table 2).
 - ``planner``: the §6 decision tool (sweep limits -> cost/throughput frontier).
+- ``scenarios``: flat scenario-spec parameterization + grid expansion for
+  the batched sweep engine (``repro.sim.sweep``).
 """
 
 from repro.core.carousel import SlidingWindow
 from repro.core.hcdc import HCDCConfig, HCDCScenario, CONFIG_I, CONFIG_II, CONFIG_III
+from repro.core.scenarios import (
+    ScenarioSpec,
+    build_config,
+    expand_grid,
+    specs_from_mapping,
+    with_seeds,
+)
 from repro.core.validation import ValidationConfig, ValidationScenario
 
 __all__ = [
@@ -20,6 +29,11 @@ __all__ = [
     "CONFIG_I",
     "CONFIG_II",
     "CONFIG_III",
+    "ScenarioSpec",
+    "build_config",
+    "expand_grid",
+    "specs_from_mapping",
+    "with_seeds",
     "ValidationConfig",
     "ValidationScenario",
 ]

@@ -425,4 +425,15 @@ PAPER_TABLE8 = {
 
 def make_config(name: str, **overrides) -> HCDCConfig:
     base = {"I": CONFIG_I, "II": CONFIG_II, "III": CONFIG_III}[name]
-    return replace(base, **overrides) if overrides else replace(base)
+    cfg = replace(base, **overrides)
+    # ``replace`` copies fields shallowly, so mutable sub-configs would be
+    # shared with the module-level CONFIG_* constants — callers that tweak
+    # e.g. ``cfg.sites[0].disk_limit`` (planner, sweep) would corrupt every
+    # later run. Re-wrap any sub-config the caller did not supply.
+    for attr in ("cost_model", "popularity", "migration_policy",
+                 "cold_deletion_policy"):
+        if attr not in overrides:
+            setattr(cfg, attr, replace(getattr(cfg, attr)))
+    if "sites" not in overrides:
+        cfg.sites = [replace(s) for s in cfg.sites]
+    return cfg

@@ -1,0 +1,181 @@
+"""Scenario-config parameterization (paper §5.3 decision workflow).
+
+The paper's decision process compares many HCDC variants — cache (disk)
+sizes, cloud egress pricing/peering options, job arrival rates, replica
+seeds — against cost and throughput. ``ScenarioSpec`` is the flat,
+picklable description of one such variant; ``build_config`` materialises it
+into an ``HCDCConfig``; ``expand_grid`` produces the Cartesian product of
+spec axes for ``repro.sim.sweep``.
+
+A spec is deliberately a *parameterization*, not a config: it stays tiny
+(plain scalars, trivially serialisable to YAML/JSON/CSV and across process
+boundaries), while the heavyweight ``HCDCConfig`` (policies, site lists,
+distributions) is rebuilt deterministically inside each worker.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import asdict, dataclass, fields, replace
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence
+
+from repro.core.hcdc import HCDCConfig, make_config
+from repro.sim.cloud import PEERING_PRICES
+from repro.sim.engine import DAY
+from repro.sim.infrastructure import TB
+
+#: Valid ``ScenarioSpec.egress`` values: tiered internet egress or one of
+#: the paper's §5.3 peering alternatives.
+EGRESS_OPTIONS = ("internet",) + tuple(sorted(PEERING_PRICES))
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One point of the §5.3 decision grid.
+
+    ``None`` always means "keep the base configuration's value"; use
+    ``float('inf')`` to request an explicitly unlimited cache/cold tier.
+    """
+
+    base: str = "III"  # Table 5 configuration name: I | II | III
+    days: float = 2.0  # simulated horizon
+    n_files: int = 20_000  # catalogue size per site
+    seed: int = 0
+    cache_tb: Optional[float] = None  # per-site hot (disk) cache limit, TB
+    gcs_limit_tb: Optional[float] = None  # cold-tier limit, TB (0 = disabled)
+    egress: str = "internet"  # internet | direct | interconnect
+    storage_price: Optional[float] = None  # USD per GB-month override
+    job_rate_scale: float = 1.0  # scales the job arrival rate
+    curves: bool = False  # record Fig 6/8 time series
+
+    def __post_init__(self) -> None:
+        if self.base not in ("I", "II", "III"):
+            raise ValueError(f"unknown base configuration {self.base!r}")
+        if self.egress not in EGRESS_OPTIONS:
+            raise ValueError(
+                f"egress must be one of {EGRESS_OPTIONS}, got {self.egress!r}")
+        if not self.days or self.days <= 0:
+            raise ValueError(f"days must be > 0, got {self.days!r}")
+        if self.n_files <= 0:
+            raise ValueError(f"n_files must be > 0, got {self.n_files!r}")
+        if not self.job_rate_scale or self.job_rate_scale <= 0:
+            raise ValueError(
+                f"job_rate_scale must be > 0, got {self.job_rate_scale!r}")
+
+    @property
+    def label(self) -> str:
+        """Compact human-readable identifier, stable across runs."""
+        cache = ("base" if self.cache_tb is None
+                 else "inf" if math.isinf(self.cache_tb)
+                 else f"{self.cache_tb:g}TB")
+        parts = [f"cfg{self.base}", f"cache={cache}", f"egress={self.egress}"]
+        if self.gcs_limit_tb is not None:
+            gcs = "inf" if math.isinf(self.gcs_limit_tb) else f"{self.gcs_limit_tb:g}TB"
+            parts.append(f"gcs={gcs}")
+        if self.storage_price is not None:
+            parts.append(f"stor={self.storage_price:g}")
+        if self.job_rate_scale != 1.0:
+            parts.append(f"rate={self.job_rate_scale:g}x")
+        parts.append(f"seed={self.seed}")
+        return ",".join(parts)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def build_config(spec: ScenarioSpec) -> HCDCConfig:
+    """Materialise a spec into a fully independent ``HCDCConfig``."""
+    cfg = make_config(spec.base,
+                      simulated_time=int(spec.days * DAY),
+                      n_files_per_site=spec.n_files,
+                      seed=spec.seed,
+                      curves=spec.curves)
+    if spec.cache_tb is not None:
+        limit = None if math.isinf(spec.cache_tb) else spec.cache_tb * TB
+        for site in cfg.sites:
+            site.disk_limit = limit
+    if spec.gcs_limit_tb is not None:
+        cfg.gcs_limit = (None if math.isinf(spec.gcs_limit_tb)
+                         else spec.gcs_limit_tb * TB)
+    if spec.egress != "internet":
+        cfg.cost_model = replace(cfg.cost_model, peering=spec.egress)
+    if spec.storage_price is not None:
+        cfg.cost_model = replace(cfg.cost_model,
+                                 storage_per_gb_month=spec.storage_price)
+    if spec.job_rate_scale != 1.0:
+        # Scaling mu and sigma together scales the truncated-normal mean
+        # exactly: max(kX, 0) = k max(X, 0) for k > 0.
+        cfg.jobs_mu *= spec.job_rate_scale
+        cfg.jobs_sigma *= spec.job_rate_scale
+    return cfg
+
+
+_SPEC_FIELDS = {f.name for f in fields(ScenarioSpec)}
+
+
+def expand_grid(axes: Mapping[str, Any]) -> List[ScenarioSpec]:
+    """Cartesian product of spec axes into a spec list.
+
+    Values may be scalars (fixed for the whole sweep) or sequences (swept).
+    ``{"cache_tb": [50, 100], "egress": ["internet", "direct"], "seed":
+    [0, 1], "days": 1}`` expands to 2 x 2 x 2 = 8 specs. Axis order in the
+    result follows the mapping's iteration order, last axis fastest.
+    """
+    unknown = set(axes) - _SPEC_FIELDS
+    if unknown:
+        raise ValueError(f"unknown spec fields: {sorted(unknown)} "
+                         f"(valid: {sorted(_SPEC_FIELDS)})")
+    names: List[str] = []
+    levels: List[Sequence[Any]] = []
+    for name, value in axes.items():
+        if isinstance(value, (list, tuple)):
+            names.append(name)
+            levels.append(value)
+        else:
+            names.append(name)
+            levels.append([value])
+    return [ScenarioSpec(**dict(zip(names, combo)))
+            for combo in itertools.product(*levels)]
+
+
+def specs_from_mapping(doc: Mapping[str, Any]) -> List[ScenarioSpec]:
+    """Parse a sweep document (already-loaded YAML/JSON) into specs.
+
+    Two accepted shapes::
+
+        {"axes": {...}, "days": 1, ...}     # grid + shared fixed fields
+        {"scenarios": [{...}, {...}], ...}  # explicit spec list + shared
+
+    Shared top-level fields apply to every spec unless the axis/scenario
+    overrides them.
+    """
+    doc = dict(doc)
+    axes = doc.pop("axes", None)
+    scenarios = doc.pop("scenarios", None)
+    shared = {k: v for k, v in doc.items() if k in _SPEC_FIELDS}
+    extra = set(doc) - _SPEC_FIELDS
+    if extra:
+        raise ValueError(f"unknown top-level fields: {sorted(extra)}")
+    if (axes is None) == (scenarios is None):
+        raise ValueError("provide exactly one of 'axes' or 'scenarios'")
+    if axes is not None:
+        merged = dict(shared)
+        merged.update(axes)
+        return expand_grid(merged)
+    specs = []
+    for s in scenarios:
+        s = dict(s)
+        unknown = set(s) - _SPEC_FIELDS
+        if unknown:
+            raise ValueError(f"unknown scenario fields: {sorted(unknown)} "
+                             f"(valid: {sorted(_SPEC_FIELDS)})")
+        specs.append(ScenarioSpec(**{**shared, **s}))
+    return specs
+
+
+def with_seeds(specs: Iterable[ScenarioSpec], n_seeds: int,
+               first_seed: int = 0) -> List[ScenarioSpec]:
+    """Replicate each spec across ``n_seeds`` consecutive seeds."""
+    return [replace(s, seed=first_seed + k)
+            for s in specs for k in range(n_seeds)]

@@ -9,6 +9,8 @@ Four modules mirror the paper's architecture:
 ``transfer`` holds the transfer managers (the paper's two built-in tick
 implementations plus an analytic event-driven fast path) and
 ``distributions`` the bounded random samplers fitted in Tables 1/3.
+``sweep`` is the batched scenario-sweep engine for the §5.3 decision
+workflow (grids of configs -> cost/throughput frontier).
 """
 
 from repro.sim.engine import BaseSimulation, Schedulable
@@ -26,6 +28,13 @@ from repro.sim.transfer import (
     Transfer,
     TransferState,
 )
+from repro.sim.sweep import (
+    ScenarioResult,
+    SweepResult,
+    pareto_indices,
+    run_scenario,
+    run_sweep,
+)
 
 __all__ = [
     "BaseSimulation",
@@ -41,4 +50,9 @@ __all__ = [
     "TransferState",
     "BandwidthTransferManager",
     "DurationTransferManager",
+    "ScenarioResult",
+    "SweepResult",
+    "pareto_indices",
+    "run_scenario",
+    "run_sweep",
 ]

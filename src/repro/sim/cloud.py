@@ -30,6 +30,10 @@ from repro.sim.infrastructure import GiB, Site, StorageElement
 
 MONTH_SECONDS = 30 * 24 * 3600
 
+#: Flat egress prices (USD/GiB) for the paper's §5.3 peering alternatives
+#: to tiered internet egress.
+PEERING_PRICES = {"direct": 0.05, "interconnect": 0.02}
+
 
 @dataclass
 class GCSCostModel:
@@ -47,10 +51,8 @@ class GCSCostModel:
     peering: Optional[str] = None  # None | "direct" | "interconnect"
 
     def egress_cost(self, monthly_bytes: float) -> float:
-        if self.peering == "direct":
-            return 0.05 * monthly_bytes / GiB
-        if self.peering == "interconnect":
-            return 0.02 * monthly_bytes / GiB
+        if self.peering is not None:
+            return PEERING_PRICES[self.peering] * monthly_bytes / GiB
         cost, prev, left = 0.0, 0.0, monthly_bytes
         for bound, price in self.egress_tiers:
             span = min(left, bound - prev)
@@ -77,6 +79,15 @@ class MonthlyBill:
     @property
     def total(self) -> float:
         return self.storage_usd + self.network_usd + self.ops_usd
+
+
+def sum_bills(bills: List[MonthlyBill]) -> MonthlyBill:
+    """Aggregate monthly bills into one run-total bill (sweep reporting)."""
+    return MonthlyBill(
+        storage_usd=sum(b.storage_usd for b in bills),
+        network_usd=sum(b.network_usd for b in bills),
+        ops_usd=sum(b.ops_usd for b in bills),
+    )
 
 
 class GCSBucket(StorageElement):

@@ -68,6 +68,7 @@ class BaseSimulation:
         self.now: int = 0
         self.seed = seed
         self._stop_time: Optional[int] = None
+        self.events_executed: int = 0  # run-loop work metric (sweep/bench)
 
     # -- scheduling ---------------------------------------------------------
     def schedule(self, event: Schedulable, at: int) -> None:
@@ -100,6 +101,7 @@ class BaseSimulation:
                 ev = entry.event
                 if ev.cancelled:
                     continue
+                self.events_executed += 1
                 ev.on_update(self, now)
                 if ev.interval is not None and not ev.cancelled:
                     self.schedule(ev, now + ev.interval)

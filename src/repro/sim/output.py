@@ -8,9 +8,11 @@ Fig. 7 waiting-time distributions.
 
 from __future__ import annotations
 
+import csv
 import json
+import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,6 +31,19 @@ class TimeSeries:
 
     def to_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
         return np.asarray(self.times), np.asarray(self.values)
+
+    def summary(self) -> Dict[str, float]:
+        """Scalar digest (min/mean/max/last) — per-config sweep reporting."""
+        if not self.values:
+            return {"n": 0.0, "min": 0.0, "mean": 0.0, "max": 0.0, "last": 0.0}
+        a = np.asarray(self.values, dtype=np.float64)
+        return {
+            "n": float(len(a)),
+            "min": float(a.min()),
+            "mean": float(a.mean()),
+            "max": float(a.max()),
+            "last": float(a[-1]),
+        }
 
 
 @dataclass
@@ -86,6 +101,23 @@ class OutputCollector:
         }
         with open(path, "w") as f:
             json.dump(doc, f, indent=2)
+
+
+def write_csv(path: str, rows: Sequence[Dict[str, object]],
+              fieldnames: Optional[Sequence[str]] = None) -> None:
+    """Write dict rows as CSV; columns default to first-seen key order."""
+    if fieldnames is None:
+        seen: Dict[str, None] = {}
+        for r in rows:
+            for k in r:
+                seen.setdefault(k)
+        fieldnames = list(seen)
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(fieldnames), restval="")
+        w.writeheader()
+        w.writerows(rows)
 
 
 def mean_and_error(per_run_values: List[float]) -> Tuple[float, float, float]:

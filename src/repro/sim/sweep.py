@@ -1,0 +1,250 @@
+"""Batched scenario-sweep engine (paper §5.3: the decision workflow).
+
+The paper's stated purpose for the simulation is "to assist with the
+decision process of using commercial cloud storage": compare many scenario
+variants — hot-cache sizes, egress pricing/peering options, job arrival
+rates, seeds — on a cost vs. throughput frontier. This module turns the
+single-run ``HCDCScenario`` into that instrument:
+
+- ``run_scenario(spec)``: one ``ScenarioSpec`` -> ``ScenarioResult``
+  (metrics, monthly-bill breakdown, time-series digests, run stats). Specs
+  are built via ``repro.core.scenarios`` and executed on the analytic
+  ``EventDrivenTransferService`` fast path, so a reduced-scale config runs
+  in seconds.
+- ``run_sweep(specs)``: executes a batch with process-level parallelism
+  (simulations are pure Python and CPU-bound, so threads would serialize on
+  the GIL). Results are deterministic per spec — a parallel sweep is
+  bit-identical to running each config serially with the same seed.
+- ``SweepResult``: ordered results + CSV/JSON export + Pareto-front
+  extraction (minimize cloud cost, maximize jobs done) + seed aggregation
+  in the paper's Table 6/7/8 mean/sd% presentation.
+"""
+
+from __future__ import annotations
+
+import json
+import multiprocessing
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from dataclasses import dataclass, field, replace
+from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence
+
+from repro.sim.cloud import sum_bills
+from repro.sim.output import mean_and_error, write_csv
+
+if TYPE_CHECKING:  # repro.core imports repro.sim; keep runtime acyclic
+    from repro.core.scenarios import ScenarioSpec
+
+
+@dataclass
+class ScenarioResult:
+    """Outcome of one simulated configuration (picklable)."""
+
+    spec: ScenarioSpec
+    metrics: Dict[str, float]
+    storage_usd: float
+    network_usd: float
+    ops_usd: float
+    wall_s: float
+    events: int
+    series: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    @property
+    def cost_usd(self) -> float:
+        return self.storage_usd + self.network_usd + self.ops_usd
+
+    @property
+    def jobs_done(self) -> float:
+        return self.metrics["jobs_done"]
+
+    @property
+    def jobs_per_day(self) -> float:
+        return self.jobs_done / self.spec.days
+
+    def row(self) -> Dict[str, Any]:
+        """Flat record for CSV/JSON export."""
+        m = self.metrics
+        r: Dict[str, Any] = {"label": self.spec.label}
+        r.update(self.spec.to_dict())
+        del r["curves"]
+        r.update(
+            jobs_done=m["jobs_done"],
+            jobs_per_day=self.jobs_per_day,
+            job_waiting_h_mean=m["job_waiting_h_mean"],
+            download_pb=m["download_pb"],
+            tape_to_disk_pb=sum(v for k, v in m.items()
+                                if k.endswith(".tape_to_disk_pb")),
+            gcs_to_disk_pb=m["gcs_to_disk_pb"],
+            disk_to_gcs_pb=m["disk_to_gcs_pb"],
+            gcs_used_pb=m["gcs_used_pb"],
+            storage_usd=self.storage_usd,
+            network_usd=self.network_usd,
+            ops_usd=self.ops_usd,
+            cost_usd=self.cost_usd,
+            cost_per_kjob=1e3 * self.cost_usd / max(m["jobs_done"], 1.0),
+            wall_s=self.wall_s,
+            events=self.events,
+        )
+        return r
+
+
+def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
+    """Build and run one configuration; the sweep's unit of work.
+
+    Top-level (not a closure) so ``ProcessPoolExecutor`` can pickle it; all
+    randomness is derived from ``spec.seed``, so the result is independent
+    of which process runs it.
+    """
+    # Deferred imports: repro.core depends on repro.sim, so importing it at
+    # module scope would make ``repro.sim`` circular.
+    from repro.core.hcdc import HCDCScenario
+    from repro.core.scenarios import build_config
+
+    cfg = build_config(spec)
+    t0 = time.perf_counter()
+    scenario = HCDCScenario(cfg)
+    metrics = scenario.run()
+    wall = time.perf_counter() - t0
+    bill = sum_bills(scenario.gcs.bills)
+    series = {name: ts.summary() for name, ts in scenario.out.series.items()}
+    return ScenarioResult(
+        spec=spec,
+        metrics=metrics,
+        storage_usd=bill.storage_usd,
+        network_usd=bill.network_usd,
+        ops_usd=bill.ops_usd,
+        wall_s=wall,
+        events=scenario.sim.events_executed,
+        series=series,
+    )
+
+
+def pareto_indices(costs: Sequence[float],
+                   values: Sequence[float]) -> List[int]:
+    """Indices of the non-dominated (min cost, max value) points.
+
+    Returned sorted by cost ascending; of points with identical (cost,
+    value) only the first is kept, so the front is a strictly increasing
+    cost/value staircase.
+    """
+    if len(costs) != len(values):
+        raise ValueError("costs and values must have equal length")
+    order = sorted(range(len(costs)), key=lambda i: (costs[i], -values[i]))
+    front: List[int] = []
+    best = float("-inf")
+    for i in order:
+        if values[i] > best:
+            front.append(i)
+            best = values[i]
+    return front
+
+
+@dataclass
+class SweepResult:
+    """Ordered results of one sweep (same order as the input specs)."""
+
+    results: List[ScenarioResult]
+    wall_s: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    @property
+    def configs_per_sec(self) -> float:
+        return len(self.results) / self.wall_s if self.wall_s > 0 else 0.0
+
+    # -- frontier ------------------------------------------------------------
+    def pareto_front(self) -> List[ScenarioResult]:
+        """Cost/throughput frontier: min cloud cost, max jobs done."""
+        idx = pareto_indices([r.cost_usd for r in self.results],
+                             [r.jobs_done for r in self.results])
+        return [self.results[i] for i in idx]
+
+    # -- tabulation ----------------------------------------------------------
+    def rows(self) -> List[Dict[str, Any]]:
+        front = {id(r) for r in self.pareto_front()}
+        out = []
+        for r in self.results:
+            row = r.row()
+            row["pareto"] = int(id(r) in front)
+            out.append(row)
+        return out
+
+    def aggregate_seeds(self) -> List[Dict[str, Any]]:
+        """Group by spec-minus-seed; mean and sd% across seeds (the paper's
+        Table 6/7/8 multi-run presentation)."""
+        groups: Dict[ScenarioSpec, List[ScenarioResult]] = {}
+        for r in self.results:
+            groups.setdefault(replace(r.spec, seed=0), []).append(r)
+        rows = []
+        for key, rs in groups.items():
+            jobs_m, jobs_sd, _ = mean_and_error([r.jobs_done for r in rs])
+            cost_m, cost_sd, _ = mean_and_error([r.cost_usd for r in rs])
+            row: Dict[str, Any] = {"label": key.label.rsplit(",seed=", 1)[0]}
+            row.update(key.to_dict())
+            del row["curves"], row["seed"]
+            row.update(n_seeds=len(rs), jobs_done_mean=jobs_m,
+                       jobs_done_sd_pct=jobs_sd, cost_usd_mean=cost_m,
+                       cost_usd_sd_pct=cost_sd,
+                       cost_per_kjob_mean=1e3 * cost_m / max(jobs_m, 1.0))
+            rows.append(row)
+        return rows
+
+    # -- export --------------------------------------------------------------
+    def to_csv(self, path: str) -> None:
+        write_csv(path, self.rows())
+
+    def pareto_to_csv(self, path: str) -> None:
+        write_csv(path, [r.row() for r in self.pareto_front()])
+
+    def to_json(self, path: str) -> None:
+        doc = {
+            "wall_s": self.wall_s,
+            "configs_per_sec": self.configs_per_sec,
+            "rows": self.rows(),
+            "pareto": [r.spec.label for r in self.pareto_front()],
+            "series": {r.spec.label: r.series
+                       for r in self.results if r.series},
+        }
+        if os.path.dirname(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
+def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
+              progress: Optional[Callable[[int, int, ScenarioResult], None]]
+              = None) -> SweepResult:
+    """Execute every spec; results keep the input order.
+
+    ``workers``: process count; ``None`` uses all CPUs (capped at the batch
+    size), ``0``/``1`` runs serially in-process (useful under profilers and
+    in tests of determinism).
+    """
+    specs = list(specs)
+    if workers is None:
+        workers = min(len(specs), os.cpu_count() or 1)
+    t0 = time.perf_counter()
+    results: List[Optional[ScenarioResult]] = [None] * len(specs)
+    if workers <= 1 or len(specs) <= 1:
+        for i, spec in enumerate(specs):
+            results[i] = run_scenario(spec)
+            if progress is not None:
+                progress(i + 1, len(specs), results[i])
+    else:
+        # Spawn (not fork): callers may have JAX loaded, whose thread pools
+        # make forked children deadlock-prone; the sweep worker itself only
+        # needs numpy, so spawn startup stays cheap.
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+            futures = {pool.submit(run_scenario, s): i
+                       for i, s in enumerate(specs)}
+            done = 0
+            for fut in as_completed(futures):
+                i = futures[fut]
+                results[i] = fut.result()
+                done += 1
+                if progress is not None:
+                    progress(done, len(specs), results[i])
+    return SweepResult(results=list(results), wall_s=time.perf_counter() - t0)

@@ -85,5 +85,8 @@ def test_local_dispatch_matches_global_multidevice():
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                          text=True, timeout=300,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              # without this jax hangs probing for non-CPU
+                              # backends on machines without accelerators
+                              "JAX_PLATFORMS": "cpu"})
     assert "OK" in res.stdout, res.stderr[-2000:]

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on system invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -r requirements-dev.txt")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.carousel import SlidingWindow

@@ -1,0 +1,234 @@
+"""Sweep-engine tests: batch == serial runs, Pareto front, grid expansion."""
+
+import csv
+
+import pytest
+
+from repro.core.hcdc import CONFIG_III, HCDCScenario
+from repro.core.scenarios import (
+    ScenarioSpec,
+    build_config,
+    expand_grid,
+    specs_from_mapping,
+    with_seeds,
+)
+from repro.sim.cloud import sum_bills
+from repro.sim.sweep import (
+    SweepResult,
+    pareto_indices,
+    run_scenario,
+    run_sweep,
+)
+
+# Reduced scale shared by the cross-validation tests (seconds per config).
+TINY = dict(days=0.25, n_files=3000)
+
+
+# --------------------------------------------------------------------- grid
+def test_expand_grid_cartesian_product():
+    specs = expand_grid({
+        "base": "III", "days": 1.0, "n_files": 1000,
+        "cache_tb": [10.0, 20.0, 50.0],
+        "egress": ["internet", "direct"],
+        "seed": [0, 1],
+    })
+    assert len(specs) == 3 * 2 * 2
+    assert len(set(specs)) == len(specs)  # all distinct
+    assert {s.cache_tb for s in specs} == {10.0, 20.0, 50.0}
+    assert all(s.days == 1.0 and s.n_files == 1000 for s in specs)
+    # last axis fastest (seed varies first)
+    assert (specs[0].seed, specs[1].seed) == (0, 1)
+    assert specs[0].cache_tb == specs[1].cache_tb
+
+
+def test_expand_grid_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown spec fields"):
+        expand_grid({"cache_gb": [1]})
+
+
+def test_specs_from_mapping_axes_and_scenarios():
+    by_axes = specs_from_mapping({
+        "days": 0.5, "n_files": 100,
+        "axes": {"cache_tb": [5.0, 10.0], "seed": [0, 1]},
+    })
+    assert len(by_axes) == 4
+    assert all(s.days == 0.5 and s.n_files == 100 for s in by_axes)
+
+    by_list = specs_from_mapping({
+        "days": 0.5,
+        "scenarios": [{"cache_tb": 5.0}, {"cache_tb": 10.0, "days": 1.0}],
+    })
+    assert [s.cache_tb for s in by_list] == [5.0, 10.0]
+    assert [s.days for s in by_list] == [0.5, 1.0]  # scenario overrides shared
+
+    with pytest.raises(ValueError, match="exactly one"):
+        specs_from_mapping({"days": 1})
+    with pytest.raises(ValueError, match="exactly one"):
+        specs_from_mapping({"axes": {}, "scenarios": []})
+
+
+def test_spec_validates_fields():
+    with pytest.raises(ValueError, match="base"):
+        ScenarioSpec(base="IV")
+    with pytest.raises(ValueError, match="egress"):
+        ScenarioSpec(egress="carrier-pigeon")
+
+
+def test_with_seeds_replicates():
+    specs = with_seeds([ScenarioSpec(cache_tb=5.0)], 3, first_seed=10)
+    assert [s.seed for s in specs] == [10, 11, 12]
+    assert all(s.cache_tb == 5.0 for s in specs)
+
+
+# ------------------------------------------------------------------- config
+def test_build_config_applies_spec():
+    spec = ScenarioSpec(base="III", days=1.0, n_files=500, cache_tb=25.0,
+                        egress="interconnect", storage_price=0.02,
+                        job_rate_scale=2.0, gcs_limit_tb=float("inf"))
+    cfg = build_config(spec)
+    assert all(s.disk_limit == 25.0e12 for s in cfg.sites)
+    assert cfg.gcs_limit is None  # inf -> unlimited
+    assert cfg.cost_model.peering == "interconnect"
+    assert cfg.cost_model.storage_per_gb_month == 0.02
+    assert cfg.jobs_mu == pytest.approx(2 * 0.63366)
+
+
+def test_build_config_leaves_module_constants_untouched():
+    """Regression: make_config must not share mutable sub-configs with the
+    CONFIG_* constants (dataclasses.replace copies shallowly)."""
+    before = [s.disk_limit for s in CONFIG_III.sites]
+    peering_before = CONFIG_III.cost_model.peering
+    cfg = build_config(ScenarioSpec(base="III", cache_tb=1.0,
+                                    egress="direct"))
+    cfg.sites[0].disk_limit = 123.0
+    cfg.cost_model.peering = "interconnect"
+    assert [s.disk_limit for s in CONFIG_III.sites] == before
+    assert CONFIG_III.cost_model.peering == peering_before
+
+
+# ---------------------------------------------------- batch == serial runs
+def test_sweep_matches_individual_runs():
+    """A parallel sweep over N configs must reproduce N individual
+    ``HCDCScenario`` runs exactly (same seeds -> identical metrics, cost
+    and transfer totals)."""
+    specs = [
+        ScenarioSpec(base="III", cache_tb=10.0, seed=0, **TINY),
+        ScenarioSpec(base="III", cache_tb=20.0, egress="interconnect",
+                     seed=1, **TINY),
+        ScenarioSpec(base="II", seed=2, **TINY),
+    ]
+    swept = run_sweep(specs, workers=2)
+    assert len(swept) == len(specs)
+    for spec, res in zip(specs, swept.results):
+        assert res.spec == spec  # order preserved
+        scenario = HCDCScenario(build_config(spec))
+        metrics = scenario.run()
+        assert metrics == res.metrics  # bit-identical, incl. transfer totals
+        bill = sum_bills(scenario.gcs.bills)
+        assert bill.storage_usd == res.storage_usd
+        assert bill.network_usd == res.network_usd
+        assert bill.ops_usd == res.ops_usd
+        assert res.cost_usd == bill.total
+
+
+def test_sweep_serial_equals_parallel():
+    specs = with_seeds([ScenarioSpec(base="III", cache_tb=10.0, **TINY)], 2)
+    serial = run_sweep(specs, workers=1)
+    parallel = run_sweep(specs, workers=2)
+    for a, b in zip(serial.results, parallel.results):
+        assert a.metrics == b.metrics
+        assert a.cost_usd == b.cost_usd
+
+
+def test_run_scenario_deterministic_for_seed():
+    spec = ScenarioSpec(base="III", cache_tb=10.0, seed=7, **TINY)
+    a, b = run_scenario(spec), run_scenario(spec)
+    assert a.metrics == b.metrics and a.cost_usd == b.cost_usd
+
+
+# ------------------------------------------------------------------- pareto
+def test_pareto_front_hand_built():
+    #           A        B        C        D          E        F
+    costs = [1.0, 2.0, 3.0, 2.5, 4.0, 1.0]
+    values = [10.0, 20.0, 15.0, 25.0, 25.0, 5.0]
+    # A dominates F (same cost, more value); D dominates C and E;
+    # the front is the strictly increasing staircase A -> B -> D.
+    assert pareto_indices(costs, values) == [0, 1, 3]
+
+
+def test_pareto_duplicates_and_errors():
+    assert pareto_indices([1.0, 1.0], [5.0, 5.0]) == [0]  # one representative
+    assert pareto_indices([], []) == []
+    with pytest.raises(ValueError):
+        pareto_indices([1.0], [1.0, 2.0])
+
+
+def test_sweep_result_front_and_rows(tmp_path):
+    spec = ScenarioSpec(base="III", cache_tb=10.0, **TINY)
+    res = run_scenario(spec)
+
+    def clone(cost_scale, jobs):
+        import copy
+
+        r = copy.deepcopy(res)
+        r.network_usd = res.network_usd * cost_scale
+        r.metrics = dict(res.metrics, jobs_done=jobs)
+        return r
+
+    sweep = SweepResult(results=[clone(1.0, 100), clone(2.0, 300),
+                                 clone(3.0, 200)], wall_s=1.0)
+    front = sweep.pareto_front()
+    assert [r.jobs_done for r in front] == [100, 300]
+    rows = sweep.rows()
+    assert [r["pareto"] for r in rows] == [1, 1, 0]
+    csv_path = tmp_path / "sweep.csv"
+    sweep.to_csv(str(csv_path))
+    with open(csv_path) as f:
+        read = list(csv.DictReader(f))
+    assert len(read) == 3
+    assert float(read[1]["jobs_done"]) == 300
+    assert read[0]["egress"] == "internet"
+
+
+def test_aggregate_seeds_groups_and_averages():
+    specs = with_seeds([ScenarioSpec(base="III", cache_tb=10.0, **TINY)], 2)
+    sweep = run_sweep(specs, workers=1)
+    agg = sweep.aggregate_seeds()
+    assert len(agg) == 1
+    row = agg[0]
+    assert row["n_seeds"] == 2
+    expect = sum(r.jobs_done for r in sweep.results) / 2
+    assert row["jobs_done_mean"] == pytest.approx(expect)
+    assert "seed" not in row
+
+
+def test_curves_produce_series_digests(tmp_path):
+    res = run_scenario(ScenarioSpec(base="III", cache_tb=10.0, curves=True,
+                                    **TINY))
+    assert "gcs_used" in res.series
+    digest = res.series["gcs_used"]
+    assert digest["n"] > 0 and digest["max"] >= digest["min"]
+    sweep = SweepResult(results=[res], wall_s=1.0)
+    out = tmp_path / "sweep.json"
+    sweep.to_json(str(out))
+    import json
+
+    doc = json.loads(out.read_text())
+    assert doc["series"][res.spec.label]["gcs_used"]["n"] == digest["n"]
+
+
+# ------------------------------------------------------------ spec physics
+def test_job_rate_scale_scales_submissions():
+    base = run_scenario(ScenarioSpec(base="I", **TINY))
+    double = run_scenario(ScenarioSpec(base="I", job_rate_scale=2.0, **TINY))
+    ratio = double.metrics["jobs_submitted"] / base.metrics["jobs_submitted"]
+    assert 1.8 < ratio < 2.2
+
+
+def test_peering_reduces_network_cost():
+    internet = run_scenario(ScenarioSpec(base="III", cache_tb=5.0, **TINY))
+    peered = run_scenario(ScenarioSpec(base="III", cache_tb=5.0,
+                                       egress="interconnect", **TINY))
+    # identical seed/config -> identical traffic, cheaper flat price
+    assert peered.metrics["jobs_done"] == internet.metrics["jobs_done"]
+    assert peered.network_usd < internet.network_usd

@@ -1,0 +1,27 @@
+# Convenience targets; everything runs from the source tree (PYTHONPATH=src).
+
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench bench-smoke lint clean
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PY) benchmarks/run.py
+
+bench-smoke:
+	FAST=1 BENCH_JSON=BENCH_ci.json $(PY) benchmarks/run.py
+
+lint:
+	ruff check src tests benchmarks scripts
+
+# Remove interpreter droppings (bytecode caches shipped by accident break
+# nothing but pollute diffs and wheels).
+clean:
+	find src tests benchmarks scripts examples -name __pycache__ -type d -prune -exec rm -rf {} + 2>/dev/null || true
+	find src tests benchmarks scripts examples -name '*.pyc' -delete 2>/dev/null || true
+	rm -rf .pytest_cache .ruff_cache

@@ -1,18 +1,37 @@
-"""Benchmark: batched scenario-sweep engine throughput (configs/sec).
+"""Benchmark: scenario-sweep engine throughput (configs/sec, lanes/sec).
 
-Times the same reduced-scale config grid twice — serially in-process and
-through the process pool — so the derived column shows both absolute
-configs/sec and the parallel speedup the sweep engine buys on this machine.
+Part 1 times the event-driven reference engine on the same reduced-scale
+grid twice — serially in-process and through the process pool — so the
+derived column shows absolute configs/sec and the parallel speedup.
+
+Part 2 times the batched lane-per-scenario JAX backend
+(``run_sweep(..., backend="jax")``) on a pricing-heavy §5.3 decision grid
+(cache sizes x egress options x storage prices x seeds). Pricing axes are
+billing-only, so the packed grid simulates one dynamics lane per
+(cache, seed) point and bills every pricing variant from it. The jax rows
+report both configs/sec (completed configurations, including the pricing
+fan-out) and raw simulated lanes/sec; ``sweep.jax_speedup`` compares
+batched configs/sec (warm, after the one-off XLA compile reported
+separately as ``cold``) against the process pool measured on an
+evenly-sampled subset of the *same* grid.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+from dataclasses import replace
 from typing import Dict, List, Optional
 
 from repro.core.scenarios import expand_grid, with_seeds
 from repro.sim.sweep import run_sweep
+
+#: Clock step (seconds) for the batched-backend throughput rows. Coarser
+#: than the 10 s generator interval: the per-tick fixed cost dominates
+#: batched wall time on CPU, and
+#: ``test_batched.test_jax_backend_tick_coarsening_stays_close`` pins this
+#: exact tick within 2%/5% (jobs/cost) of the 10 s clock.
+JAX_BENCH_TICK = 60.0
 
 
 def _grid(n_configs: int, days: float, n_files: int):
@@ -24,8 +43,19 @@ def _grid(n_configs: int, days: float, n_files: int):
     return with_seeds(specs, seeds)[:n_configs]
 
 
+def _pricing_grid(days: float, n_files: int, n_prices: int, n_seeds: int):
+    """§5.3 decision grid: 4 cache points x 3 egress x N storage prices
+    x seeds. Dynamics lanes = 4 x seeds; the rest is billing fan-out."""
+    prices = [round(0.018 + 0.002 * i, 3) for i in range(n_prices)]
+    specs = expand_grid({"base": "III", "days": days, "n_files": n_files,
+                         "cache_tb": [10.0, 20.0, 40.0, 80.0],
+                         "egress": ["internet", "direct", "interconnect"],
+                         "storage_price": prices})
+    return with_seeds(specs, n_seeds)
+
+
 def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
-        workers: Optional[int] = None) -> List[Dict]:
+        workers: Optional[int] = None, fast: bool = False) -> List[Dict]:
     specs = _grid(n_configs, days, n_files)
     workers = workers or min(len(specs), os.cpu_count() or 1)
     serial = run_sweep(specs, workers=1)
@@ -45,6 +75,41 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
          "us_per_call": serial.wall_s * 1e6,
          "derived": events / serial.wall_s if serial.wall_s > 0 else 0.0},
     ]
+
+    # -- batched (jax) backend vs the process pool on one decision grid --
+    jdays, jfiles = (0.1, 1000) if fast else (0.25, 1000)
+    jspecs = _pricing_grid(jdays, jfiles,
+                           n_prices=3 if fast else 9, n_seeds=2)
+    n_sub = 8 if fast else 24
+    stride = max(1, len(jspecs) // n_sub)
+    subset = jspecs[::stride][:n_sub]
+    # dynamics-lane count for the row label (the pack-time dedup rule:
+    # pricing-only fields do not change the simulated dynamics)
+    n_lanes = len({replace(s, egress="internet", storage_price=None)
+                   for s in jspecs})
+    cold = run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
+    warm = run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
+    base = run_sweep(subset, workers=workers)
+    warm_cps = warm.configs_per_sec  # configs/sec (lanes x pricing fan-out)
+    base_cps = base.configs_per_sec
+    g = len(jspecs)
+    rows += [
+        {"name": f"sweep.jax.cold.{g}cfg{n_lanes}lane",
+         "us_per_call": cold.wall_s / g * 1e6,
+         "derived": cold.configs_per_sec},
+        {"name": f"sweep.jax.warm.{g}cfg{n_lanes}lane",
+         "us_per_call": warm.wall_s / g * 1e6,
+         "derived": warm_cps},
+        {"name": f"sweep.jax.lanes_per_sec.{n_lanes}lane",
+         "us_per_call": warm.wall_s / n_lanes * 1e6,
+         "derived": n_lanes / warm.wall_s if warm.wall_s > 0 else 0.0},
+        {"name": f"sweep.jax.process_baseline.{len(subset)}cfg",
+         "us_per_call": base.wall_s / len(subset) * 1e6,
+         "derived": base_cps},
+        {"name": "sweep.jax_speedup",
+         "us_per_call": warm.wall_s * 1e6,
+         "derived": warm_cps / base_cps if base_cps > 0 else 0.0},
+    ]
     return rows
 
 
@@ -54,8 +119,10 @@ def main() -> None:
     ap.add_argument("--days", type=float, default=0.25)
     ap.add_argument("--files", type=int, default=4000)
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
-    for r in run(args.configs, args.days, args.files, args.workers):
+    for r in run(args.configs, args.days, args.files, args.workers,
+                 fast=args.fast):
         print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g}")
 
 

@@ -16,7 +16,7 @@ from repro.core.validation import (
     ValidationConfig,
     ValidationScenario,
 )
-from repro.sim.engine import DAY, HOUR
+from repro.sim.engine import DAY
 from repro.sim.output import mean_and_error
 
 

@@ -87,6 +87,16 @@ def main(argv=None) -> int:
     ap.add_argument("--first-seed", type=int, default=0)
     ap.add_argument("--curves", action="store_true",
                     help="record Fig 6/8 time-series digests (JSON output)")
+    ap.add_argument("--backend", default="process",
+                    choices=["process", "jax"],
+                    help="process = event-driven reference engine (one "
+                         "process per config); jax = batched lane-per-"
+                         "scenario engine (whole grid as one jit+vmap "
+                         "program; requires uniform --days/--files)")
+    ap.add_argument("--tick", type=float, default=10.0,
+                    help="jax backend clock step in seconds (default 10, "
+                         "the paper's generator interval; larger ticks "
+                         "trade temporal resolution for speed)")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes (default: all CPUs)")
     ap.add_argument("--out", default="", help="write the full table as CSV")
@@ -120,10 +130,14 @@ def main(argv=None) -> int:
         print("error: the grid expanded to 0 configs", file=sys.stderr)
         return 2
 
-    workers = (min(len(specs), os.cpu_count() or 1)
-               if args.workers is None else args.workers)
-    print(f"sweep: {len(specs)} configs, "
-          f"workers={max(workers, 1)}", flush=True)
+    if args.backend == "jax":
+        print(f"sweep: {len(specs)} configs, backend=jax "
+              f"(tick={args.tick:g}s)", flush=True)
+    else:
+        workers = (min(len(specs), os.cpu_count() or 1)
+                   if args.workers is None else args.workers)
+        print(f"sweep: {len(specs)} configs, "
+              f"workers={max(workers, 1)}", flush=True)
 
     def progress(done, total, result):
         if not args.quiet:
@@ -131,7 +145,12 @@ def main(argv=None) -> int:
                   f"jobs={result.jobs_done:8.0f} cost=${result.cost_usd:12,.2f}",
                   flush=True)
 
-    result = run_sweep(specs, workers=args.workers, progress=progress)
+    try:
+        result = run_sweep(specs, workers=args.workers, progress=progress,
+                           backend=args.backend, tick=args.tick)
+    except ValueError as e:  # e.g. non-uniform grid on the jax backend
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     print(f"done in {result.wall_s:.1f}s "
           f"({result.configs_per_sec:.2f} configs/sec)")
 

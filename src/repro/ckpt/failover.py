@@ -17,9 +17,8 @@ deterministic control logic, unit-tested and driven by the training loop:
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
 
 class FailureDetector:

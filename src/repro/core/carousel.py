@@ -13,7 +13,7 @@ bytes of prefetched training shards resident on the hot tier.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Callable, Dict, Hashable, Optional
+from typing import Dict, Hashable, Optional
 
 
 class SlidingWindow:

@@ -42,7 +42,7 @@ from repro.sim.distributions import (
     TruncatedNormalCount,
 )
 from repro.sim.engine import DAY, HOUR, MINUTE, BaseSimulation, Schedulable
-from repro.sim.infrastructure import GiB, MB, TB, File, NetworkLink, Site, StorageElement
+from repro.sim.infrastructure import GiB, TB, File, NetworkLink, Site, StorageElement
 from repro.sim.output import OutputCollector
 from repro.sim.transfer import EventDrivenTransferService
 

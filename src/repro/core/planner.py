@@ -11,9 +11,9 @@ the unlimited-disk baseline (configuration I).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import List, Optional
 
-from repro.core.hcdc import HCDCConfig, HCDCScenario, make_config
+from repro.core.hcdc import HCDCScenario, make_config
 from repro.sim.engine import DAY
 from repro.sim.infrastructure import TB
 

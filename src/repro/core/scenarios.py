@@ -20,10 +20,14 @@ import math
 from dataclasses import asdict, dataclass, fields, replace
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence
 
+import numpy as np
+
 from repro.core.hcdc import HCDCConfig, make_config
-from repro.sim.cloud import PEERING_PRICES
+from repro.sim.cloud import MONTH_SECONDS, PEERING_PRICES
+from repro.sim.distributions import BoundedExponential, TruncatedNormalCount
 from repro.sim.engine import DAY
-from repro.sim.infrastructure import TB
+from repro.sim.infrastructure import GiB, TB
+from repro.sim.transfer import LinkTickTable
 
 #: Valid ``ScenarioSpec.egress`` values: tiered internet egress or one of
 #: the paper's §5.3 peering alternatives.
@@ -179,3 +183,250 @@ def with_seeds(specs: Iterable[ScenarioSpec], n_seeds: int,
     """Replicate each spec across ``n_seeds`` consecutive seeds."""
     return [replace(s, seed=first_seed + k)
             for s in specs for k in range(n_seeds)]
+
+
+# --------------------------------------------------------------------------
+# Spec grid -> dense lane arrays (the ``backend="jax"`` packing).
+# --------------------------------------------------------------------------
+
+@dataclass
+class PackedGrid:
+    """A spec grid packed into dense per-lane arrays for ``repro.sim.batched``.
+
+    Lane ``l`` is one ``ScenarioSpec``. All catalogue randomness (file sizes,
+    popularity) and the per-tick job-count stream replicate the event-driven
+    engine's host RNG draw order exactly, so both backends simulate the same
+    files and the same arrival process; per-job file selection and run
+    durations are drawn from the continuation of the same per-lane stream
+    (the event engine interleaves those draws with event execution, so they
+    are statistically — not bitwise — equivalent).
+
+    Shapes: L lanes, S sites, F files/site, J jobs/site (padded),
+    M = 3*S links (per site: tape->disk, gcs->disk, disk->gcs),
+    T simulation ticks, Mo 30-day month buckets.
+    """
+
+    specs: List[ScenarioSpec]
+    site_names: List[str]
+    horizon: int  # simulated seconds
+    tick: float  # simulation step dt (seconds)
+    n_months: int  # month buckets covering the horizon
+    full_months: int  # complete 30-day months (always billed)
+    max_jobs_per_tick: int  # K bound for the per-tick submission loop
+    #: spec index -> dynamics lane. Egress pricing and storage price only
+    #: enter the bill, never the simulated dynamics, so specs that differ
+    #: only in pricing share one simulated lane and are billed separately
+    #: (the paper's §5.3 "compare pricing options on the same workload").
+    lane_of: np.ndarray  # [n_specs] i32
+    # per-lane scenario parameters
+    disk_limit: np.ndarray  # [L,S] f32 bytes (inf = unlimited)
+    gcs_enabled: np.ndarray  # [L] bool
+    gcs_limit: np.ndarray  # [L] f32 bytes (inf = unlimited)
+    min_migrate_pop: np.ndarray  # [L] f32 (migration-policy threshold)
+    link_bw: np.ndarray  # [L,M] f32 bytes/s
+    link_slots: np.ndarray  # [L,M] f32 (inf = unlimited)
+    link_latency: np.ndarray  # [L,M] f32 seconds
+    link_mode: np.ndarray  # [L,M] i32 (1 = per-transfer throughput)
+    # per-lane catalogue + job stream
+    sizes: np.ndarray  # [L,S,F] f32 bytes
+    pop: np.ndarray  # [L,S,F] f32
+    job_fid: np.ndarray  # [L,S,J] i32
+    job_submit_tick: np.ndarray  # [L,S,J] i32 (== T for padding)
+    job_submit_time: np.ndarray  # [L,S,J] f32 seconds
+    job_tail: np.ndarray  # [L,S,J] f32: download + run duration, seconds
+    jobs_per_tick: np.ndarray  # [L,T,S] i32
+    n_jobs: np.ndarray  # [L,S] i32 (true, unpadded counts)
+    # tick grid (shared by every lane)
+    times: np.ndarray  # [T] f32 tick clock values (times[0] == 0)
+    dts: np.ndarray  # [T] f32 step durations (dts[0] == 0)
+    month_idx: np.ndarray  # [T] i32 month bucket per tick
+    # host-side billing
+    cost_models: List[Any]  # GCSCostModel per lane
+
+    @property
+    def n_specs(self) -> int:
+        return len(self.specs)
+
+    @property
+    def n_lanes(self) -> int:
+        """Distinct simulated dynamics lanes (<= ``n_specs``)."""
+        return int(self.sizes.shape[0])
+
+    @property
+    def n_ticks(self) -> int:
+        return int(self.times.shape[0])
+
+
+def _require_uniform(name: str, values: Sequence[Any]) -> Any:
+    distinct = set(values)
+    if len(distinct) > 1:
+        raise ValueError(
+            f"backend='jax' requires a uniform {name!r} across the grid "
+            f"(lanes share one tick/array layout), got {sorted(distinct)}")
+    return values[0]
+
+
+def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
+    """Pack a spec grid into the dense arrays the batched backend consumes.
+
+    Every lane must share ``days`` and ``n_files`` (they set the shared tick
+    count and file-array width); all other axes — cache/GCS limits, egress
+    pricing, storage price, job rate, seed — vary freely per lane.
+    ``curves`` is not supported (time-series live on the event engine).
+    """
+    specs = list(specs)
+    if not specs:
+        raise ValueError("cannot pack an empty spec list")
+    if tick <= 0:
+        raise ValueError(f"tick must be > 0 seconds, got {tick!r}")
+    _require_uniform("days", [s.days for s in specs])
+    _require_uniform("n_files", [s.n_files for s in specs])
+    if any(s.curves for s in specs):
+        raise ValueError("curves=True requires backend='process' "
+                         "(the batched backend records no time series)")
+
+    all_cfgs = [build_config(s) for s in specs]
+    _require_uniform("site count", [len(c.sites) for c in all_cfgs])
+    _require_uniform("gen_interval", [c.gen_interval for c in all_cfgs])
+    for cfg in all_cfgs:
+        if cfg.tape_latency_sigma > 0:
+            raise ValueError("tape_latency_sigma > 0 requires "
+                             "backend='process'")
+        if cfg.cold_deletion_policy.capacity_threshold is not None:
+            raise ValueError("cold-deletion trimming requires "
+                             "backend='process'")
+
+    # Deduplicate dynamics: egress choice and storage price feed only the
+    # cost model (``build_config`` touches nothing else for them), so specs
+    # that differ only there simulate as one lane and are billed per spec.
+    lane_index: Dict[ScenarioSpec, int] = {}
+    lane_of = np.zeros(len(specs), dtype=np.int32)
+    cfgs = []
+    for i, spec in enumerate(specs):
+        key = replace(spec, egress="internet", storage_price=None)
+        if key not in lane_index:
+            lane_index[key] = len(cfgs)
+            cfgs.append(all_cfgs[i])
+        lane_of[i] = lane_index[key]
+
+    L = len(cfgs)
+    S = len(cfgs[0].sites)
+    F = cfgs[0].n_files_per_site
+    horizon = cfgs[0].simulated_time
+
+    # Shared tick grid: 0, tick, 2*tick, ..., horizon (final step may be
+    # shorter so the horizon endpoint is always simulated, like the event
+    # engine's ``run(until=horizon)``).
+    grid = np.arange(0, horizon + 1e-9, tick, dtype=np.float64)
+    if grid[-1] < horizon:
+        grid = np.append(grid, float(horizon))
+    times = grid.astype(np.float32)
+    dts = np.diff(grid, prepend=0.0).astype(np.float32)
+    T = len(times)
+    n_months = max(1, int(np.ceil(horizon / MONTH_SECONDS)))
+    full_months = int(horizon // MONTH_SECONDS)
+    month_idx = np.minimum((grid // MONTH_SECONDS).astype(np.int32),
+                           n_months - 1)
+
+    disk_limit = np.full((L, S), np.inf, dtype=np.float32)
+    gcs_enabled = np.zeros(L, dtype=bool)
+    gcs_limit = np.full(L, np.inf, dtype=np.float32)
+    min_pop = np.zeros(L, dtype=np.float32)
+    sizes = np.zeros((L, S, F), dtype=np.float32)
+    pop = np.zeros((L, S, F), dtype=np.float32)
+    tables = []
+    per_lane_jobs = []  # (fid, submit_tick, submit_time, tail) per site
+
+    for li, cfg in enumerate(cfgs):
+        rng = np.random.default_rng(cfg.seed)
+        size_dist = BoundedExponential(cfg.size_lam, cfg.size_lo, cfg.size_hi,
+                                       unit=GiB)
+        cum_ws = []
+        for si, site in enumerate(cfg.sites):
+            # Same draw order as ``hcdc._SiteState``: sizes, then popularity.
+            sizes[li, si] = size_dist.sample(rng, F)
+            pop[li, si] = cfg.popularity.sample_popularity(rng, F)
+            w = cfg.popularity.selection_weights(pop[li, si])
+            cw = np.cumsum(w)
+            cum_ws.append(cw / cw[-1])
+            disk_limit[li, si] = (np.inf if site.disk_limit is None
+                                  else site.disk_limit)
+        # Same draw as ``HCDCScenario.__init__``: the pre-sampled job stream.
+        n_gen = cfg.simulated_time // cfg.gen_interval + 1
+        counts = TruncatedNormalCount(cfg.jobs_mu, cfg.jobs_sigma).sample(
+            rng, (S, n_gen))
+        gen_times = np.arange(n_gen, dtype=np.float64) * cfg.gen_interval
+        dur_dist = BoundedExponential(cfg.dur_lam, lo=cfg.dur_lo)
+        lane_jobs = []
+        for si in range(S):
+            emitted = np.diff(np.floor(np.cumsum(counts[si])),
+                              prepend=0.0).astype(np.int64)
+            j_times = np.repeat(gen_times, emitted)
+            u = rng.random(len(j_times))
+            durs = dur_dist.sample(rng, len(j_times))
+            fid = np.searchsorted(cum_ws[si], u, side="right").astype(np.int32)
+            dl = sizes[li, si, fid].astype(np.float64) / cfg.download
+            tail = np.maximum(1, (dl + durs).astype(np.int64))
+            j_tick = np.searchsorted(grid, j_times, side="left").astype(np.int32)
+            lane_jobs.append((fid, j_tick, j_times.astype(np.float32),
+                              tail.astype(np.float32)))
+        per_lane_jobs.append(lane_jobs)
+
+        gcs_enabled[li] = cfg.gcs_enabled
+        gcs_limit[li] = np.inf if cfg.gcs_limit is None else cfg.gcs_limit
+        min_pop[li] = cfg.migration_policy.min_popularity
+        rates, slots, lats = [], [], []
+        for site in cfg.sites:
+            rates += [site.tape_to_disk_mb_s, cfg.gcs_to_disk, cfg.disk_to_gcs]
+            slots += [cfg.max_active] * 3
+            lats += [cfg.tape_latency, 0.0, 0.0]
+        tables.append(LinkTickTable.from_values(rates, slots, lats))
+
+    J = max(len(j[0]) for lane in per_lane_jobs for j in lane)
+    job_fid = np.zeros((L, S, J), dtype=np.int32)
+    job_submit_tick = np.full((L, S, J), T, dtype=np.int32)
+    job_submit_time = np.zeros((L, S, J), dtype=np.float32)
+    job_tail = np.zeros((L, S, J), dtype=np.float32)
+    jobs_per_tick = np.zeros((L, T, S), dtype=np.int32)
+    n_jobs = np.zeros((L, S), dtype=np.int32)
+    for li, lane_jobs in enumerate(per_lane_jobs):
+        for si, (fid, j_tick, j_time, tail) in enumerate(lane_jobs):
+            n = len(fid)
+            n_jobs[li, si] = n
+            job_fid[li, si, :n] = fid
+            job_submit_tick[li, si, :n] = j_tick
+            job_submit_time[li, si, :n] = j_time
+            job_tail[li, si, :n] = tail
+            jobs_per_tick[li, :, si] = np.bincount(j_tick, minlength=T)
+    max_jobs_per_tick = int(jobs_per_tick.max()) if jobs_per_tick.size else 0
+
+    return PackedGrid(
+        specs=specs,
+        site_names=[s.name for s in cfgs[0].sites],
+        horizon=horizon,
+        tick=float(tick),
+        n_months=n_months,
+        full_months=full_months,
+        max_jobs_per_tick=max_jobs_per_tick,
+        lane_of=lane_of,
+        disk_limit=disk_limit,
+        gcs_enabled=gcs_enabled,
+        gcs_limit=gcs_limit,
+        min_migrate_pop=min_pop,
+        link_bw=np.stack([t.bw for t in tables]),
+        link_slots=np.stack([t.slots for t in tables]),
+        link_latency=np.stack([t.latency for t in tables]),
+        link_mode=np.stack([t.mode for t in tables]),
+        sizes=sizes,
+        pop=pop,
+        job_fid=job_fid,
+        job_submit_tick=job_submit_tick,
+        job_submit_time=job_submit_time,
+        job_tail=job_tail,
+        jobs_per_tick=jobs_per_tick,
+        n_jobs=n_jobs,
+        times=times,
+        dts=dts,
+        month_idx=month_idx,
+        cost_models=[c.cost_model for c in all_cfgs],
+    )

@@ -19,14 +19,14 @@ under this reading.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.sim.distributions import BoundedExponential, FractionalCounter
 from repro.sim.engine import HOUR, DAY, BaseSimulation, Schedulable
-from repro.sim.infrastructure import GiB, MB, GB, File, NetworkLink, Site, StorageElement
+from repro.sim.infrastructure import GB, GiB, File, NetworkLink, Site, StorageElement
 from repro.sim.output import OutputCollector
 from repro.sim.transfer import EventDrivenTransferService
 
@@ -99,7 +99,8 @@ class ValidationScenario:
         class Generator(Schedulable):
             def __init__(self) -> None:
                 super().__init__(interval=scenario.cfg.gen_interval)
-                self.counters = {l.name: FractionalCounter() for l in scenario.links}
+                self.counters = {ln.name: FractionalCounter()
+                                 for ln in scenario.links}
 
             def on_update(self, sim: BaseSimulation, now: int) -> None:
                 cfg = scenario.cfg

@@ -24,7 +24,7 @@ the paper's Fig. 7 backlog analysis.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.carousel import LRUTracker, SlidingWindow

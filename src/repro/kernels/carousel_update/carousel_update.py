@@ -26,8 +26,6 @@ Two kernels: ``count_kernel`` (pass 1) and ``update_kernel`` (pass 2).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

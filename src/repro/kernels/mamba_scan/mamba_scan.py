@@ -17,8 +17,6 @@ state like the jnp associative-scan reference does.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

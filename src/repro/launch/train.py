@@ -17,7 +17,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.ckpt.failover import FailureDetector
@@ -29,7 +28,7 @@ from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import init_params
 from repro.parallel.sharding import ParallelPlan, plan_for
 from repro.sim.cloud import GCSCostModel
-from repro.train.optimizer import OptConfig, make_optimizer
+from repro.train.optimizer import make_optimizer
 from repro.train.train_step import make_train_step
 
 

@@ -14,7 +14,6 @@ memory that makes `long_500k` feasible for SSM/hybrid/mostly-local archs.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -180,7 +179,6 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
             shard_experts=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (logits [B, T, V], aux_loss)."""
     x, positions = embed_inputs(cfg, params, batch)
-    enc_kv = None
     if cfg.is_enc_dec:
         enc_in = batch["enc_input"]
         if cfg.frontend == "audio":

@@ -13,7 +13,7 @@ arctic-480b additionally has a parallel dense residual MLP
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

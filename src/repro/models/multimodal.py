@@ -9,7 +9,6 @@ smoke tests and document the contract.
 
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -24,8 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

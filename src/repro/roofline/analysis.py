@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1,

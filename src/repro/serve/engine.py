@@ -11,7 +11,7 @@ continuous batching with slot recycling.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp

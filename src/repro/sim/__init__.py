@@ -10,7 +10,8 @@ Four modules mirror the paper's architecture:
 implementations plus an analytic event-driven fast path) and
 ``distributions`` the bounded random samplers fitted in Tables 1/3.
 ``sweep`` is the batched scenario-sweep engine for the §5.3 decision
-workflow (grids of configs -> cost/throughput frontier).
+workflow (grids of configs -> cost/throughput frontier); ``batched`` is
+its vectorized lane-per-scenario JAX backend (``backend="jax"``).
 """
 
 from repro.sim.engine import BaseSimulation, Schedulable
@@ -25,6 +26,7 @@ from repro.sim.cloud import GCSBucket, GCSCostModel
 from repro.sim.transfer import (
     BandwidthTransferManager,
     DurationTransferManager,
+    LinkTickTable,
     Transfer,
     TransferState,
 )
@@ -50,6 +52,7 @@ __all__ = [
     "TransferState",
     "BandwidthTransferManager",
     "DurationTransferManager",
+    "LinkTickTable",
     "ScenarioResult",
     "SweepResult",
     "pareto_indices",

@@ -1,0 +1,538 @@
+"""Lane-per-scenario batched sweep backend (``run_sweep(..., backend="jax")``).
+
+The event-driven reference engine (``repro.core.hcdc``) runs one scenario
+per Python interpreter; the §5.3 decision workflow wants *grids* of
+scenarios. This module runs an entire packed grid as **one** ``jit`` +
+``vmap`` JAX program: lane ``l`` is one ``ScenarioSpec``, every lane steps
+a shared fixed-tick clock, and per-lane transfer/link state advances
+through the ``repro.kernels.carousel_update`` tick math (Pallas on TPU,
+the jnp reference elsewhere). The paper's billing quantities — GCS
+byte-seconds, tiered egress volume, class A/B operation counts — are
+accumulated on device per 30-day month bucket and folded into the
+existing ``GCSCostModel`` / ``MonthlyBill`` machinery on the way out, so
+``backend="jax"`` returns the same ``SweepResult`` shape as the process
+backend.
+
+Fidelity contract (cross-validated in ``tests/test_batched.py``): the
+packed grid replicates the reference engine's catalogue and job-arrival
+randomness draw-for-draw, while per-job file selection and run durations
+come from the continuation of the same per-lane stream; the fixed tick
+quantizes event times by at most one ``dt``. Per-lane jobs-done and bill
+totals therefore agree with the event-driven engine within the paper's
+Table 2 validation tolerance rather than bitwise (see
+``docs/simulation.md`` for when the two clocks can diverge).
+
+Per-tick phase order mirrors the reference generator: transfer advance +
+completions -> link-slot FIFO admission -> hot-tier deletions & hot->cold
+migrations -> job submissions -> pending-job resolution -> waiting-queue
+(disk window) FIFO admission -> storage integration.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import TYPE_CHECKING, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.carousel_update.carousel_update import carousel_tick_pallas
+from repro.kernels.carousel_update.ref import carousel_tick_ref
+from repro.sim.cloud import bills_from_monthly_totals
+from repro.sim.sweep import ScenarioResult, SweepResult
+
+if TYPE_CHECKING:  # repro.core imports repro.sim; keep runtime acyclic
+    from repro.core.scenarios import PackedGrid, ScenarioSpec
+
+# File-location states; must match repro.core.hcdc.
+ABSENT, IN_FLIGHT, PRESENT = 0, 1, 2
+
+#: Disk-window (waiting queue) admissions attempted per site per tick. The
+#: event engine admits any number per tick; bounding the vectorized window
+#: is safe because arrivals are ~0.64 jobs/tick/site (Table 3), far below
+#: it — a burst simply drains over the next few ticks.
+WAIT_ADMITS_PER_TICK = 4
+
+_INF = jnp.float32(jnp.inf)
+_BIG_TICKET = jnp.int32(2 ** 30)
+
+
+def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
+    """Build the per-lane tick body and post-scan reduction (closures over
+    the static dimensions).
+
+    Vectorization notes: the per-tick candidate sets (this tick's job
+    arrivals, the waiting-queue window) are tiny, so their sequential
+    semantics — later candidates see earlier reservations — are computed as
+    unrolled scalar recurrences over K/W-vectors, and the results land in
+    the big ``[S, F]`` state arrays through *one* scatter per array.
+    Scatters use duplicate-safe combinators (``add`` of deltas, ``max``/
+    ``min`` for flags) because the same file id can appear several times in
+    a candidate window.
+    """
+
+    def tick_fn(state, xs, const):
+        now, dt, month, t, jobs_now = xs
+        (sizes, pop, job_fid, job_submit_tick, job_tail, disk_limit,
+         gcs_enabled, gcs_limit, min_pop, bw, slots, latency, mode) = const
+        F = sizes.shape[1]
+        J = job_fid.shape[1]
+        M = bw.shape[0]
+        st = dict(state)
+        site_rows = jnp.arange(S, dtype=jnp.int32)
+
+        # -- consumer counts (jobs submitted strictly before this tick that
+        # have not finished by ``now``; deletions run before submissions in
+        # the reference generator, so this tick's arrivals are excluded).
+        submitted = job_submit_tick < t
+        finished = (st["job_ready"] < _INF) & \
+            (st["job_ready"] + job_tail <= now)
+        active_job = submitted & ~finished
+        flat_fid = (job_fid + site_rows[:, None] * F)
+        consumers = jax.ops.segment_sum(
+            active_job.reshape(-1).astype(jnp.int32),
+            flat_fid.reshape(-1), num_segments=S * F).reshape(S, F)
+
+        # -- advance transfers one tick (the carousel hot-loop kernel) ----
+        now_prev = now - dt
+        t_active = st["tr_slot"] & (st["tr_start"] <= now_prev + 0.5)
+        tick = carousel_tick_pallas if use_pallas else carousel_tick_ref
+        new_done, completed, _ = tick(
+            st["tr_link"].reshape(-1), t_active.reshape(-1),
+            st["tr_done"].reshape(-1), st["tr_total"].reshape(-1),
+            bw, mode, dt)
+        comp = completed.reshape(S, F)
+        new_done = new_done.reshape(S, F)
+        ltype = st["tr_link"] % 3  # 0 tape->disk, 1 gcs->disk, 2 disk->gcs
+        comp_tape = comp & (ltype == 0)
+        comp_recall = comp & (ltype == 1)
+        comp_mig = comp & (ltype == 2)
+        inbound = comp_tape | comp_recall
+
+        st["disk_state"] = jnp.where(inbound, PRESENT, st["disk_state"])
+        st["tape_b"] += jnp.sum(sizes * comp_tape, axis=1)
+        st["gcsdisk_b"] += jnp.sum(sizes * comp_recall, axis=1)
+        recall_bytes = jnp.sum(sizes * comp_recall)
+        st["egress_mo"] = st["egress_mo"].at[month].add(recall_bytes)
+        st["cls_b_mo"] = st["cls_b_mo"].at[month].add(
+            jnp.sum(comp_recall).astype(jnp.float32))
+        st["gcs_state"] = jnp.where(comp_mig, PRESENT, st["gcs_state"])
+        st["diskgcs_b"] += jnp.sum(sizes * comp_mig, axis=1)
+        st["cls_a_mo"] = st["cls_a_mo"].at[month].add(
+            jnp.sum(comp_mig).astype(jnp.float32))
+        # migrated with no remaining consumer: drop the hot copy now
+        drop_hot = comp_mig & (consumers == 0) & (st["disk_state"] == PRESENT)
+        st["disk_used"] -= jnp.sum(sizes * drop_hot, axis=1)
+        st["disk_state"] = jnp.where(drop_hot, ABSENT, st["disk_state"])
+        st["tr_slot"] = st["tr_slot"] & ~comp
+        st["tr_done"] = jnp.where(comp, 0.0, new_done)
+        st["tr_total"] = jnp.where(comp, _INF, st["tr_total"])
+        st["tr_start"] = jnp.where(comp, _INF, st["tr_start"])
+
+        # -- link-slot FIFO admission (tickets are contiguous per link) ---
+        occ = jnp.zeros((M,), jnp.float32).at[st["tr_link"].reshape(-1)].add(
+            st["tr_slot"].reshape(-1).astype(jnp.float32))
+        free = jnp.maximum(slots - occ, 0.0)
+        n_q = (st["lq_next"] - st["lq_serve"]).astype(jnp.float32)
+        admit = jnp.minimum(free, n_q).astype(jnp.int32)
+        new_serve = st["lq_serve"] + admit
+        adm_row = st["lq_queued"] & \
+            (st["lq_ticket"] < new_serve[st["tr_link"]])
+        st["tr_slot"] = st["tr_slot"] | adm_row
+        st["tr_start"] = jnp.where(adm_row, now + latency[st["tr_link"]],
+                                   st["tr_start"])
+        st["lq_queued"] = st["lq_queued"] & ~adm_row
+        st["lq_serve"] = new_serve
+        occ = occ + admit.astype(jnp.float32)
+
+        # -- hot-tier deletions + hot->cold migrations --------------------
+        limited = jnp.isfinite(disk_limit)[:, None]
+        cand = (consumers == 0) & (st["disk_state"] == PRESENT) & limited
+        gs = st["gcs_state"]
+        migratable = gcs_enabled & (gs == ABSENT) & (pop >= min_pop)
+        delete = cand & (~gcs_enabled | (gs == PRESENT)
+                         | ((gs == ABSENT) & ~(pop >= min_pop)))
+        want_mig = cand & migratable
+        # shared GCS capacity is consumed site-sequentially (only the
+        # scalar offset is sequential; the mask algebra stays vectorized).
+        # The reference admits every *individually* fitting file (a too-big
+        # candidate is skipped, not head-blocking): a cumulative-prefix
+        # gate refined over a few passes approximates that greedy scan —
+        # each pass admits the next fitting run past a blocker.
+        migs = []
+        gcs_used = st["gcs_used"]
+        for s in range(S):
+            admitted = jnp.zeros((F,), bool)
+            for _ in range(3):
+                rem = want_mig[s] & ~admitted
+                csum = jnp.cumsum(sizes[s] * rem)
+                new = rem & (gcs_used + csum <= gcs_limit)
+                gcs_used = gcs_used + jnp.sum(sizes[s] * new)
+                admitted = admitted | new
+            migs.append(admitted)
+        mig = jnp.stack(migs)
+        st["gcs_used"] = gcs_used
+        st["gcs_state"] = jnp.where(mig, IN_FLIGHT, gs)
+        st["disk_used"] -= jnp.sum(sizes * delete, axis=1)
+        st["disk_state"] = jnp.where(delete, ABSENT, st["disk_state"])
+        # submit migrations on each site's disk->gcs link (FIFO: direct
+        # slots only while the link queue is empty, overflow queues)
+        mlink = 3 * site_rows + 2  # [S]
+        rank = jnp.cumsum(mig.astype(jnp.float32), axis=1) - 1.0
+        q_empty = (st["lq_next"][mlink] == st["lq_serve"][mlink])[:, None]
+        free_m = jnp.maximum(slots[mlink] - occ[mlink], 0.0)[:, None]
+        direct = mig & q_empty & (rank < free_m)
+        queued = mig & ~direct
+        qrank = jnp.cumsum(queued.astype(jnp.int32), axis=1) - 1
+        st["tr_slot"] = st["tr_slot"] | direct
+        st["tr_link"] = jnp.where(mig, mlink[:, None], st["tr_link"])
+        st["tr_total"] = jnp.where(mig, sizes, st["tr_total"])
+        st["tr_done"] = jnp.where(mig, 0.0, st["tr_done"])
+        st["tr_start"] = jnp.where(direct, now, st["tr_start"])
+        st["lq_ticket"] = jnp.where(
+            queued, st["lq_next"][mlink][:, None] + qrank, st["lq_ticket"])
+        st["lq_queued"] = st["lq_queued"] | queued
+        st["lq_next"] = st["lq_next"].at[mlink].add(
+            jnp.sum(queued, axis=1).astype(jnp.int32))
+        occ = occ.at[mlink].add(jnp.sum(direct, axis=1).astype(jnp.float32))
+
+        # =================================================================
+        # Candidate-window planning. This tick's job arrivals (K per site)
+        # and the waiting-queue heads (W per site) are tiny windows; their
+        # sequential semantics — later candidates see earlier reservations
+        # — run as scalar prefix recurrences on gathered vectors, and every
+        # resulting state change is DEFERRED and applied below as a single
+        # duplicate-safe scatter per array (scatter passes over the big
+        # [S, F] state dominate the tick cost).
+        # =================================================================
+        W = WAIT_ADMITS_PER_TICK
+        plans = []  # per group: dict of planned per-candidate vectors
+
+        def plan_links(s, fids, fire, occ):
+            """Assign link slots / FIFO queue tickets to fired candidates.
+
+            Mutates only the small [M] occupancy/ticket counters; returns
+            the per-candidate plan (direct slot, queue ticket, start time).
+            """
+            from_gcs = gcs_enabled & (st["gcs_state"][s, fids] == PRESENT)
+            link_local = jnp.where(from_gcs, 1, 0)
+            direct = jnp.zeros_like(fire)
+            queued = jnp.zeros_like(fire)
+            tstart = jnp.full(fire.shape, jnp.inf, jnp.float32)
+            lq_val = jnp.zeros(fire.shape, jnp.int32)
+            for loc in (0, 1):  # tape->disk, gcs->disk
+                m = 3 * s + loc
+                mask = fire & (link_local == loc)
+                q_empty = st["lq_next"][m] == st["lq_serve"][m]
+                free_m = jnp.maximum(slots[m] - occ[m], 0.0)
+                rk = jnp.cumsum(mask.astype(jnp.float32)) - 1.0
+                d = mask & q_empty & (rk < free_m)
+                qd = mask & ~d
+                qrk = jnp.cumsum(qd.astype(jnp.int32)) - 1
+                direct = direct | d
+                queued = queued | qd
+                tstart = jnp.where(d, now + latency[m], tstart)
+                lq_val = jnp.where(qd, st["lq_next"][m] + qrk, lq_val)
+                st["lq_next"] = st["lq_next"].at[m].add(
+                    jnp.sum(qd).astype(jnp.int32))
+                occ = occ.at[m].add(jnp.sum(d).astype(jnp.float32))
+            return occ, dict(rows=s * F + fids, fire=fire,
+                             m_vec=3 * s + link_local, direct=direct,
+                             queued=queued, tstart=tstart, lq_val=lq_val)
+
+        # -- group 1: job submissions for this tick (only the first arrival
+        # of a file starts its transfer; later same-tick jobs attach) -----
+        if K > 0:
+            ks = jnp.arange(K, dtype=jnp.int32)
+            for s in range(S):
+                jid = jnp.minimum(st["ptr"][s] + ks, J - 1)
+                valid = (st["ptr"][s] + ks < J) & \
+                    (job_submit_tick[s, jid] == t)
+                fids = job_fid[s, jid]
+                same = (fids[None, :] == fids[:, None]) & valid[None, :] \
+                    & (ks[None, :] < ks[:, None])
+                first = valid & ~jnp.any(same, axis=1)
+                size = sizes[s, fids]
+                ds = st["disk_state"][s, fids]
+                ww = st["wq_wait"][s, fids]
+                absent = first & (ds == ABSENT)
+                started_list = []
+                extra = jnp.float32(0.0)
+                for k in range(K):  # scalar prefix recurrence, K is tiny
+                    fit = st["disk_used"][s] + extra + size[k] \
+                        <= disk_limit[s]
+                    st_k = absent[k] & fit
+                    started_list.append(st_k)
+                    extra = extra + jnp.where(st_k, size[k], 0.0)
+                started = jnp.stack(started_list)
+                st["disk_used"] = st["disk_used"].at[s].add(extra)
+                to_wait = absent & ~started & ~ww
+                wrank = jnp.cumsum(to_wait.astype(jnp.int32)) - 1
+                occ, plan = plan_links(s, fids, started, occ)
+                plan["to_wait"] = to_wait
+                plan["wq_val"] = jnp.where(to_wait,
+                                           st["wq_next"][s] + wrank, 0)
+                st["wq_next"] = st["wq_next"].at[s].add(
+                    jnp.sum(to_wait).astype(jnp.int32))
+                plan["stale"] = jnp.zeros_like(started)
+                plans.append(plan)
+        st["ptr"] = st["ptr"] + jobs_now
+
+        # -- group 2: waiting-queue admission — strict FIFO on the disk
+        # window; the head blocks admission until its file fits (§5.2).
+        # Planned from the pre-scatter queue state: entries started above
+        # (queue-jump) are excluded by fid comparison; entries enqueued
+        # above are not yet visible (they join next tick, matching a tail
+        # position in the FIFO).
+        sub_started = [jnp.where(p["fire"], p["rows"], -1) for p in plans]
+        for s in range(S):
+            tickets = jnp.where(st["wq_wait"][s], st["wq_ticket"][s],
+                                _BIG_TICKET)
+            neg, idx = jax.lax.top_k(-tickets, W)  # W lowest tickets
+            validw = (neg > -_BIG_TICKET)
+            rows = s * F + idx
+            jumped = jnp.zeros(idx.shape, bool)
+            for started_rows in sub_started:
+                jumped = jumped | jnp.any(
+                    rows[:, None] == started_rows[None, :], axis=1)
+            ds = st["disk_state"][s, idx]
+            stale = validw & ((ds != ABSENT) | jumped)
+            size = sizes[s, idx]
+            adm_list = []
+            extra = jnp.float32(0.0)
+            blocked = jnp.asarray(False)
+            for k in range(W):
+                fit = st["disk_used"][s] + extra + size[k] <= disk_limit[s]
+                live = validw[k] & ~stale[k]
+                adm = live & fit & ~blocked
+                blocked = blocked | (live & ~fit)
+                adm_list.append(adm)
+                extra = extra + jnp.where(adm, size[k], 0.0)
+            admitted = jnp.stack(adm_list)
+            st["disk_used"] = st["disk_used"].at[s].add(extra)
+            occ, plan = plan_links(s, idx, admitted, occ)
+            plan["to_wait"] = jnp.zeros_like(admitted)
+            plan["wq_val"] = jnp.zeros(idx.shape, jnp.int32)
+            plan["stale"] = stale
+            plans.append(plan)
+
+        # -- pending jobs whose input is on disk enter queued -> running;
+        # completion is analytic (ready + download + duration). Planned
+        # starts only flip ABSENT -> IN_FLIGHT, so the pre-scatter
+        # disk_state is PRESENT-accurate here. ----------------------------
+        pending = (job_submit_tick <= t) & (st["job_ready"] >= _INF)
+        on_disk = jnp.take_along_axis(st["disk_state"], job_fid,
+                                      axis=1) == PRESENT
+        st["job_ready"] = jnp.where(pending & on_disk, now, st["job_ready"])
+
+        # -- apply the planned windows: one scatter per state array -------
+        if plans:
+            rows = jnp.concatenate([p["rows"] for p in plans])
+            fire = jnp.concatenate([p["fire"] for p in plans])
+            to_wait = jnp.concatenate([p["to_wait"] for p in plans])
+            stale = jnp.concatenate([p["stale"] for p in plans])
+            wq_val = jnp.concatenate([p["wq_val"] for p in plans])
+            m_vec = jnp.concatenate([p["m_vec"] for p in plans])
+            direct = jnp.concatenate([p["direct"] for p in plans])
+            queued = jnp.concatenate([p["queued"] for p in plans])
+            tstart = jnp.concatenate([p["tstart"] for p in plans])
+            lq_val = jnp.concatenate([p["lq_val"] for p in plans])
+            size_c = sizes.reshape(-1)[rows]
+
+            def flat(name, update):
+                st[name] = update(st[name].reshape(-1)).reshape(S, F)
+
+            cur_link = st["tr_link"].reshape(-1)[rows]
+            cur_lqt = st["lq_ticket"].reshape(-1)[rows]
+            cur_wqt = st["wq_ticket"].reshape(-1)[rows]
+            flat("disk_state", lambda a: a.at[rows].add(
+                jnp.where(fire, IN_FLIGHT - ABSENT, 0)))
+            # started/stale entries leave the wait queue; new waiters join
+            flat("wq_wait", lambda a: a.at[rows].min(~(fire | stale)))
+            flat("wq_wait", lambda a: a.at[rows].max(to_wait))
+            flat("wq_ticket", lambda a: a.at[rows].add(
+                jnp.where(to_wait, wq_val - cur_wqt, 0)))
+            flat("tr_link", lambda a: a.at[rows].add(
+                jnp.where(fire, m_vec - cur_link, 0)))
+            flat("tr_total", lambda a: a.at[rows].min(
+                jnp.where(fire, size_c, _INF)))
+            flat("tr_slot", lambda a: a.at[rows].max(direct))
+            flat("tr_start", lambda a: a.at[rows].min(tstart))
+            flat("lq_ticket", lambda a: a.at[rows].add(
+                jnp.where(queued, lq_val - cur_lqt, 0)))
+            flat("lq_queued", lambda a: a.at[rows].max(queued))
+
+        # -- integrate stored cloud volume (GB-seconds) per month ---------
+        st["gbsec_mo"] = st["gbsec_mo"].at[month].add(
+            st["gcs_used"] / 1e9 * dt)
+        return st, None
+
+    def post_fn(st, lane, horizon):
+        (sizes, job_fid, job_submit_time, job_tail) = lane
+        ready = st["job_ready"] < _INF
+        done = ready & (st["job_ready"] + job_tail <= horizon)
+        job_sizes = jnp.take_along_axis(sizes, job_fid, axis=1)
+        wait_h = (st["job_ready"] - job_submit_time) / 3600.0
+        return {
+            "jobs_done_site": jnp.sum(done, axis=1),
+            "download_b": jnp.sum(job_sizes * ready, axis=1),
+            "wait_h_sum": jnp.sum(jnp.where(ready, wait_h, 0.0)),
+            "wait_n": jnp.sum(ready),
+            "disk_used": st["disk_used"],
+            "gcs_used": st["gcs_used"],
+            "tape_b": st["tape_b"],
+            "gcsdisk_b": st["gcsdisk_b"],
+            "diskgcs_b": st["diskgcs_b"],
+            "egress_mo": st["egress_mo"],
+            "cls_a_mo": st["cls_a_mo"],
+            "cls_b_mo": st["cls_b_mo"],
+            "gbsec_mo": st["gbsec_mo"],
+        }
+
+    return tick_fn, post_fn
+
+
+@functools.lru_cache(maxsize=16)
+def _grid_program(S: int, K: int, n_months: int, use_pallas: bool):
+    """The jitted lane-vmapped simulation (cached per static shape family;
+    XLA additionally retraces per concrete array shape)."""
+    tick_fn, post_fn = _lane_step_fns(S, K, n_months, use_pallas)
+
+    def lane_sim(times, dts, month_idx, t_idx, horizon,
+                 disk_limit, gcs_enabled, gcs_limit, min_pop,
+                 bw, slots, latency, mode, sizes, pop,
+                 job_fid, job_submit_tick, job_submit_time, job_tail,
+                 jobs_per_tick):
+        F = sizes.shape[1]
+        J = job_fid.shape[1]
+        M = bw.shape[0]
+        const = (sizes, pop, job_fid, job_submit_tick, job_tail,
+                 disk_limit, gcs_enabled, gcs_limit, min_pop,
+                 bw, slots, latency, mode)
+        init = dict(
+            disk_state=jnp.zeros((S, F), jnp.int32),
+            gcs_state=jnp.zeros((S, F), jnp.int32),
+            disk_used=jnp.zeros((S,), jnp.float32),
+            gcs_used=jnp.float32(0.0),
+            tr_slot=jnp.zeros((S, F), bool),
+            tr_link=jnp.zeros((S, F), jnp.int32),
+            tr_done=jnp.zeros((S, F), jnp.float32),
+            tr_total=jnp.full((S, F), jnp.inf, jnp.float32),
+            tr_start=jnp.full((S, F), jnp.inf, jnp.float32),
+            lq_ticket=jnp.zeros((S, F), jnp.int32),
+            lq_queued=jnp.zeros((S, F), bool),
+            lq_serve=jnp.zeros((M,), jnp.int32),
+            lq_next=jnp.zeros((M,), jnp.int32),
+            wq_wait=jnp.zeros((S, F), bool),
+            wq_ticket=jnp.zeros((S, F), jnp.int32),
+            wq_next=jnp.zeros((S,), jnp.int32),
+            job_ready=jnp.full((S, J), jnp.inf, jnp.float32),
+            ptr=jnp.zeros((S,), jnp.int32),
+            tape_b=jnp.zeros((S,), jnp.float32),
+            gcsdisk_b=jnp.zeros((S,), jnp.float32),
+            diskgcs_b=jnp.zeros((S,), jnp.float32),
+            egress_mo=jnp.zeros((n_months,), jnp.float32),
+            cls_a_mo=jnp.zeros((n_months,), jnp.float32),
+            cls_b_mo=jnp.zeros((n_months,), jnp.float32),
+            gbsec_mo=jnp.zeros((n_months,), jnp.float32),
+        )
+        final, _ = jax.lax.scan(
+            lambda c, xs: tick_fn(c, xs, const), init,
+            (times, dts, month_idx, t_idx, jobs_per_tick))
+        return post_fn(final, (sizes, job_fid, job_submit_time, job_tail),
+                       horizon)
+
+    lane_axes = (None, None, None, None, None,  # shared tick grid
+                 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)
+    return jax.jit(jax.vmap(lane_sim, in_axes=lane_axes))
+
+
+def simulate_packed(grid: "PackedGrid", use_pallas: Optional[bool] = None):
+    """Run a packed grid on device; returns the raw per-lane aggregate dict
+    (numpy arrays, lane-leading)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    program = _grid_program(len(grid.site_names), grid.max_jobs_per_tick,
+                            grid.n_months, bool(use_pallas))
+    T = grid.n_ticks
+    out = program(
+        jnp.asarray(grid.times), jnp.asarray(grid.dts),
+        jnp.asarray(grid.month_idx), jnp.arange(T, dtype=jnp.int32),
+        jnp.float32(grid.horizon),
+        jnp.asarray(grid.disk_limit), jnp.asarray(grid.gcs_enabled),
+        jnp.asarray(grid.gcs_limit), jnp.asarray(grid.min_migrate_pop),
+        jnp.asarray(grid.link_bw), jnp.asarray(grid.link_slots),
+        jnp.asarray(grid.link_latency), jnp.asarray(grid.link_mode),
+        jnp.asarray(grid.sizes), jnp.asarray(grid.pop),
+        jnp.asarray(grid.job_fid), jnp.asarray(grid.job_submit_tick),
+        jnp.asarray(grid.job_submit_time), jnp.asarray(grid.job_tail),
+        jnp.asarray(grid.jobs_per_tick))
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _lane_result(grid: "PackedGrid", out: dict, si: int,
+                 wall_s: float) -> ScenarioResult:
+    """Fold one spec's dynamics-lane aggregates into a ``ScenarioResult``
+    with the same metric keys the event-driven ``HCDCScenario.metrics``
+    emits. Several specs may share one simulated lane (pricing-only
+    variants); each is billed with its own cost model."""
+    spec = grid.specs[si]
+    li = int(grid.lane_of[si])
+    names = grid.site_names
+    jobs_done_site = out["jobs_done_site"][li]
+    m = {
+        "jobs_done": float(jobs_done_site.sum()),
+        "jobs_submitted": float(grid.n_jobs[li].sum()),
+        "download_pb": float(out["download_b"][li].sum()) / 1e15,
+        "gcs_to_disk_pb": float(out["gcsdisk_b"][li].sum()) / 1e15,
+        "disk_to_gcs_pb": float(out["diskgcs_b"][li].sum()) / 1e15,
+        "gcs_used_pb": float(out["gcs_used"][li]) / 1e15,
+        "job_waiting_h_mean": (float(out["wait_h_sum"][li])
+                               / max(float(out["wait_n"][li]), 1.0)),
+    }
+    for s, name in enumerate(names):
+        m[f"{name}.tape_to_disk_pb"] = float(out["tape_b"][li, s]) / 1e15
+        m[f"{name}.jobs_done"] = float(jobs_done_site[s])
+        m[f"{name}.disk_used_pb"] = float(out["disk_used"][li, s]) / 1e15
+    bills = bills_from_monthly_totals(
+        grid.cost_models[si], out["gbsec_mo"][li], out["egress_mo"][li],
+        out["cls_a_mo"][li], out["cls_b_mo"][li], grid.full_months)
+    for i, bill in enumerate(bills):
+        m[f"month{i+1}.storage_usd"] = bill.storage_usd
+        m[f"month{i+1}.network_usd"] = bill.network_usd
+    return ScenarioResult(
+        spec=spec,
+        metrics=m,
+        storage_usd=sum(b.storage_usd for b in bills),
+        network_usd=sum(b.network_usd for b in bills),
+        ops_usd=sum(b.ops_usd for b in bills),
+        wall_s=wall_s,
+        events=grid.n_ticks,
+    )
+
+
+def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
+                  progress: Optional[Callable] = None,
+                  use_pallas: Optional[bool] = None) -> SweepResult:
+    """Execute a spec grid as one batched on-device program.
+
+    Returns a ``SweepResult`` interchangeable with the process backend's
+    (``events`` reports simulation ticks instead of event-loop pops, and
+    per-config ``wall_s`` is the batch wall time split evenly). Specs that
+    differ only in pricing (egress option, storage price) share one
+    simulated dynamics lane and are billed separately.
+    """
+    from repro.core.scenarios import pack_specs
+
+    t0 = time.perf_counter()
+    grid = pack_specs(specs, tick=tick)
+    out = simulate_packed(grid, use_pallas=use_pallas)
+    wall = time.perf_counter() - t0
+    results: List[ScenarioResult] = []
+    for si in range(grid.n_specs):
+        results.append(_lane_result(grid, out, si, wall / grid.n_specs))
+        if progress is not None:
+            progress(si + 1, grid.n_specs, results[-1])
+    return SweepResult(results=results, wall_s=wall)

@@ -23,8 +23,8 @@ Pricing (paper: "public pricing data from the GCP documentation on
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 from repro.sim.infrastructure import GiB, Site, StorageElement
 
@@ -88,6 +88,35 @@ def sum_bills(bills: List[MonthlyBill]) -> MonthlyBill:
         network_usd=sum(b.network_usd for b in bills),
         ops_usd=sum(b.ops_usd for b in bills),
     )
+
+
+def bills_from_monthly_totals(cost_model: GCSCostModel,
+                              gb_seconds: Sequence[float],
+                              egress_bytes: Sequence[float],
+                              class_a: Sequence[float],
+                              class_b: Sequence[float],
+                              full_months: int) -> List[MonthlyBill]:
+    """Tick adapter: fold per-month aggregate arrays into ``MonthlyBill``s.
+
+    Fixed-tick engines (``repro.sim.batched``) accumulate the raw billing
+    quantities per 30-day month bucket on device instead of through
+    ``GCSBucket``'s lazy event-time integration. This applies the same price
+    model with the bucket's emission rule: every *complete* month produces a
+    bill (even an all-zero one — ``GCSBucket._sync`` closes each crossed
+    boundary), while a trailing partial month is billed only if it saw any
+    stored volume or egress (``GCSBucket.finalize``).
+    """
+    bills: List[MonthlyBill] = []
+    for i in range(len(gb_seconds)):
+        if i >= full_months and gb_seconds[i] <= 0 and egress_bytes[i] <= 0:
+            continue
+        bills.append(MonthlyBill(
+            storage_usd=cost_model.storage_cost(float(gb_seconds[i])),
+            network_usd=cost_model.egress_cost(float(egress_bytes[i])),
+            ops_usd=cost_model.ops_cost(int(round(float(class_a[i]))),
+                                        int(round(float(class_b[i])))),
+        ))
+    return bills
 
 
 class GCSBucket(StorageElement):

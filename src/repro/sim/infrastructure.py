@@ -16,7 +16,7 @@ Mirrors the paper's infrastructure module (§4.1):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Iterable, Optional
 
 KB = 1000.0
@@ -175,4 +175,4 @@ class NetworkLink:
 
 
 def link_table(links: Iterable[NetworkLink]) -> Dict[tuple, NetworkLink]:
-    return {(l.src.name, l.dst.name): l for l in links}
+    return {(ln.src.name, ln.dst.name): ln for ln in links}

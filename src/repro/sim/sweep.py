@@ -215,13 +215,31 @@ class SweepResult:
 
 def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
               progress: Optional[Callable[[int, int, ScenarioResult], None]]
-              = None) -> SweepResult:
+              = None, backend: str = "process",
+              tick: float = 10.0) -> SweepResult:
     """Execute every spec; results keep the input order.
 
-    ``workers``: process count; ``None`` uses all CPUs (capped at the batch
-    size), ``0``/``1`` runs serially in-process (useful under profilers and
-    in tests of determinism).
+    ``backend`` selects the execution engine:
+
+    - ``"process"`` (default): the event-driven reference engine, one
+      Python process per config. Ground truth; bit-deterministic per seed.
+    - ``"jax"``: the fixed-tick lane-per-scenario engine
+      (``repro.sim.batched``) — the whole grid runs as one ``jit`` +
+      ``vmap`` program. Requires uniform ``days``/``n_files`` across the
+      grid and matches the reference statistically (Table 2 tolerance),
+      not bitwise; ``tick`` sets its clock step in seconds.
+
+    ``workers``: process count for the process backend; ``None`` uses all
+    CPUs (capped at the batch size), ``0``/``1`` runs serially in-process
+    (useful under profilers and in tests of determinism).
     """
+    if backend == "jax":
+        from repro.sim.batched import run_sweep_jax  # deferred: needs jax
+
+        return run_sweep_jax(specs, tick=tick, progress=progress)
+    if backend != "process":
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(expected 'process' or 'jax')")
     specs = list(specs)
     if workers is None:
         workers = min(len(specs), os.cpu_count() or 1)

@@ -26,11 +26,14 @@ from __future__ import annotations
 
 import enum
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.sim.cloud import GCSBucket
 from repro.sim.engine import BaseSimulation, Schedulable
-from repro.sim.infrastructure import File, NetworkLink, Replica, StorageElement
+from repro.sim.infrastructure import File, NetworkLink, Replica
 
 
 class TransferState(enum.Enum):
@@ -129,6 +132,54 @@ class EventDrivenTransferService:
             nxt = q.popleft()
             t.link.queued -= 1
             self._start(nxt)
+
+
+@dataclass(frozen=True)
+class LinkTickTable:
+    """Dense link-parameter arrays for fixed-tick (batched/kernel) engines.
+
+    The tick adapter between object-graph links and the vectorized
+    transfer-tick math (``repro.kernels.carousel_update`` and the
+    ``repro.sim.batched`` lane-per-scenario backend): link ``m`` advances an
+    active transfer by ``bw[m] * dt`` bytes per tick (throughput mode) or
+    ``bw[m]/count * dt`` (shared mode), holds at most ``slots[m]`` concurrent
+    transfers, and defers progress by ``latency[m]`` seconds after a slot is
+    taken (tape access latency).
+    """
+
+    bw: np.ndarray  # [M] f32, bytes/s
+    slots: np.ndarray  # [M] f32, max concurrent transfers (inf = unlimited)
+    latency: np.ndarray  # [M] f32, seconds before progress starts
+    mode: np.ndarray  # [M] i32, 1 = per-transfer throughput, 0 = shared
+
+    @classmethod
+    def from_values(cls, rates: Sequence[float],
+                    slots: Sequence[Optional[float]],
+                    latencies: Sequence[float],
+                    modes: Optional[Sequence[int]] = None) -> "LinkTickTable":
+        m = len(rates)
+        if modes is None:
+            modes = [1] * m
+        return cls(
+            bw=np.asarray(rates, dtype=np.float32),
+            slots=np.asarray([np.inf if s is None else float(s)
+                              for s in slots], dtype=np.float32),
+            latency=np.asarray(latencies, dtype=np.float32),
+            mode=np.asarray(modes, dtype=np.int32),
+        )
+
+    @classmethod
+    def from_links(cls, links: Sequence[NetworkLink]) -> "LinkTickTable":
+        return cls.from_values(
+            rates=[ln.throughput if ln.throughput is not None
+                   else ln.bandwidth for ln in links],
+            slots=[ln.max_active for ln in links],
+            latencies=[ln.src.access_latency for ln in links],
+            modes=[1 if ln.throughput is not None else 0 for ln in links],
+        )
+
+    def __len__(self) -> int:
+        return int(self.bw.shape[0])
 
 
 class BandwidthTransferManager(Schedulable):

@@ -12,7 +12,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,8 @@ class OptConfig:
 
 def adamw(cfg: OptConfig = OptConfig()) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, dtype=jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, dtype=jnp.float32)
         return {
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),

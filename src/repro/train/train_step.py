@@ -15,8 +15,7 @@
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,6 @@ from repro.models import loss_fn
 from repro.models.config import ModelConfig
 from repro.parallel.sharding import (
     ParallelPlan,
-    activation_seq_sharder,
     expert_sharder,
     spec_for_param,
     _path_str,
@@ -108,7 +106,6 @@ def make_train_step(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
                 body, (zeros, jnp.zeros((), jnp.float32)), micro)
             grads = jax.tree.map(lambda g: g / n_micro, grads)
             loss = loss_sum / n_micro
-            parts = {}
 
         new_params, new_opt = opt.update(grads, opt_state, params)
         gnorm = jnp.sqrt(sum(

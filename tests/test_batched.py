@@ -1,0 +1,207 @@
+"""Cross-validation of the batched (jax) sweep backend against the
+event-driven reference engine.
+
+The two engines share catalogue and job-arrival randomness draw-for-draw
+but differ in clocking (fixed tick vs. event jumps) and in the per-job
+selection/duration stream interleaving, so agreement is statistical: the
+per-lane tolerance is the paper's Table 2 validation tolerance (5%), the
+same bar the reference engine itself is held to against the paper.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hcdc import HCDCScenario
+from repro.core.scenarios import (
+    ScenarioSpec,
+    build_config,
+    expand_grid,
+    pack_specs,
+    with_seeds,
+)
+from repro.sim.sweep import run_sweep
+
+# Table 2 validation tolerance (fractional): the §4.2 bar for "the
+# simulation reproduces the system" — reused as the per-lane parity bar.
+TOL = 0.05
+
+TINY = dict(days=0.25, n_files=1000)
+
+
+def _close(a, b, tol=TOL, floor=1.0):
+    return abs(a - b) <= tol * max(abs(a), abs(b), floor)
+
+
+def _assert_lane_parity(ref, jx, tol=TOL):
+    assert len(ref.results) == len(jx.results)
+    for a, b in zip(ref.results, jx.results):
+        assert b.spec == a.spec
+        lbl = a.spec.label
+        # A capacity-constrained cold tier amplifies realization noise:
+        # *which* few files land in the small GCS window decides the
+        # recall (egress) volume, so the cost bar doubles there.
+        cost_tol = tol if a.spec.gcs_limit_tb is None or \
+            a.spec.gcs_limit_tb == float("inf") else 2 * tol
+        assert _close(a.jobs_done, b.jobs_done, tol), \
+            f"{lbl}: jobs_done {a.jobs_done} vs {b.jobs_done}"
+        assert _close(a.cost_usd, b.cost_usd, cost_tol), \
+            f"{lbl}: cost {a.cost_usd} vs {b.cost_usd}"
+        assert _close(a.metrics["download_pb"], b.metrics["download_pb"],
+                      tol, floor=1e-6), f"{lbl}: download_pb"
+        assert abs(a.metrics["jobs_submitted"]
+                   - b.metrics["jobs_submitted"]) <= 3, \
+            f"{lbl}: jobs_submitted"
+        assert abs(a.metrics["job_waiting_h_mean"]
+                   - b.metrics["job_waiting_h_mean"]) <= 0.05, \
+            f"{lbl}: job_waiting_h_mean"
+
+
+# ------------------------------------------------------------------ packing
+def test_pack_specs_replicates_reference_catalogue():
+    """The packed sizes/popularity replicate the event engine's host RNG
+    draws bit-for-bit (modulo the f32 cast)."""
+    spec = ScenarioSpec(base="III", cache_tb=20.0, seed=3, **TINY)
+    grid = pack_specs([spec])
+    sc = HCDCScenario(build_config(spec))
+    for si, st in enumerate(sc.sites):
+        np.testing.assert_allclose(grid.sizes[0, si], st.sizes, rtol=1e-6)
+        np.testing.assert_array_equal(grid.pop[0, si], st.pop)
+    assert grid.n_jobs[0].sum() > 0
+
+
+def test_pack_specs_deduplicates_pricing_lanes():
+    specs = expand_grid({
+        "base": "III", "cache_tb": [10.0, 20.0],
+        "egress": ["internet", "direct", "interconnect"],
+        "storage_price": [None, 0.02], **TINY,
+    })
+    grid = pack_specs(specs)
+    assert grid.n_specs == 12
+    assert grid.n_lanes == 2  # only cache_tb changes the dynamics
+    assert sorted(set(grid.lane_of.tolist())) == [0, 1]
+    # every spec keeps its own cost model
+    assert len(grid.cost_models) == 12
+
+
+def test_pack_specs_rejects_nonuniform_and_curves():
+    with pytest.raises(ValueError, match="uniform 'days'"):
+        pack_specs([ScenarioSpec(days=0.25, n_files=100),
+                    ScenarioSpec(days=0.5, n_files=100)])
+    with pytest.raises(ValueError, match="uniform 'n_files'"):
+        pack_specs([ScenarioSpec(days=0.25, n_files=100),
+                    ScenarioSpec(days=0.25, n_files=200)])
+    with pytest.raises(ValueError, match="curves"):
+        pack_specs([ScenarioSpec(days=0.25, n_files=100, curves=True)])
+    with pytest.raises(ValueError, match="tick"):
+        pack_specs([ScenarioSpec(days=0.25, n_files=100)], tick=0.0)
+
+
+def test_run_sweep_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        run_sweep([ScenarioSpec(**TINY)], backend="fortran")
+
+
+# ------------------------------------------------- reference cross-checks
+@pytest.fixture(scope="module")
+def small_grid():
+    """8 dynamics lanes x pricing variants, covering cfg I/II/III, limited
+    and unlimited tiers, both egress families."""
+    specs = (expand_grid({
+        "base": "III", "cache_tb": [10.0, 25.0, 60.0],
+        "egress": ["internet", "direct"], "seed": 1, **TINY,
+    }) + [
+        ScenarioSpec(base="I", seed=2, **TINY),
+        ScenarioSpec(base="II", seed=2, **TINY),
+        ScenarioSpec(base="III", cache_tb=15.0, gcs_limit_tb=5.0,
+                     seed=3, **TINY),
+        ScenarioSpec(base="III", cache_tb=15.0, job_rate_scale=1.5,
+                     seed=4, **TINY),
+        ScenarioSpec(base="III", cache_tb=15.0, storage_price=0.02,
+                     seed=4, **TINY),
+    ])
+    ref = run_sweep(specs, workers=2)
+    jx = run_sweep(specs, backend="jax")
+    return ref, jx
+
+
+def test_jax_backend_matches_reference_per_lane(small_grid):
+    ref, jx = small_grid
+    _assert_lane_parity(ref, jx)
+
+
+def test_jax_backend_volume_metrics_track_reference(small_grid):
+    ref, jx = small_grid
+    for a, b in zip(ref.results, jx.results):
+        for key in ("gcs_to_disk_pb", "disk_to_gcs_pb", "gcs_used_pb"):
+            assert _close(a.metrics[key], b.metrics[key], 2 * TOL,
+                          floor=1e-4), f"{a.spec.label}: {key}"
+
+
+def test_jax_backend_respects_config_structure(small_grid):
+    _, jx = small_grid
+    by_label = {r.spec.label: r for r in jx.results}
+    cfg1 = next(r for r in jx.results if r.spec.base == "I")
+    cfg2 = next(r for r in jx.results if r.spec.base == "II")
+    assert cfg1.metrics["gcs_used_pb"] == 0.0
+    assert cfg1.cost_usd == 0.0
+    assert cfg2.metrics["gcs_to_disk_pb"] == 0.0
+    limited = next(r for r in jx.results if r.spec.gcs_limit_tb == 5.0)
+    assert limited.metrics["gcs_used_pb"] <= 5.0e12 / 1e15 + 1e-9
+    # pricing-only variants share dynamics, not bills
+    a = by_label["cfgIII,cache=10TB,egress=internet,seed=1"]
+    b = by_label["cfgIII,cache=10TB,egress=direct,seed=1"]
+    assert a.metrics["jobs_done"] == b.metrics["jobs_done"]
+    assert a.metrics["gcs_to_disk_pb"] == b.metrics["gcs_to_disk_pb"]
+    assert b.network_usd < a.network_usd
+
+
+def test_jax_backend_deterministic(small_grid):
+    """Same spec batch twice -> bitwise-identical results. (Different batch
+    *shapes* may differ in the last float ulp: XLA reduction order.)"""
+    _, jx = small_grid
+    specs = [r.spec for r in jx.results][:4]
+    once = run_sweep(specs, backend="jax")
+    again = run_sweep(specs, backend="jax")
+    for a, b in zip(once.results, again.results):
+        assert a.metrics == b.metrics
+        assert a.cost_usd == b.cost_usd
+
+
+def test_jax_backend_tick_coarsening_stays_close(small_grid):
+    """A coarser clock (30/60 s vs the 10 s generator interval) shifts
+    event times by at most one tick; totals must stay within the parity
+    bar. 60 s is the tick ``benchmarks/bench_sweep.py`` runs at."""
+    _, jx = small_grid
+    specs = [r.spec for r in jx.results]
+    for tick, jobs_tol, cost_tol in ((30.0, 0.02, 0.04), (60.0, 0.02, 0.05)):
+        coarse = run_sweep(specs, backend="jax", tick=tick)
+        for a, b in zip(jx.results, coarse.results):
+            assert _close(a.jobs_done, b.jobs_done, jobs_tol), \
+                f"tick={tick}: {a.spec.label}"
+            assert _close(a.cost_usd, b.cost_usd, cost_tol), \
+                f"tick={tick}: {a.spec.label}"
+
+
+# ------------------------------------------- acceptance grid (64 configs)
+@pytest.mark.slow
+def test_jax_backend_matches_reference_64_config_grid():
+    """ISSUE 2 acceptance: a >= 64-config grid agrees with the process
+    backend per lane within the Table 2 tolerance for jobs done and the
+    monthly-bill total.
+
+    Horizon note: at 0.25 simulated days the *reference engine's own*
+    seed-to-seed cost spread is ~±6% (recall volume on a churning cache is
+    the noisiest observable), so a 5% per-lane bar is only meaningful once
+    the horizon averages that noise down — 0.75 days brings it to ~±2%.
+    """
+    specs = with_seeds(expand_grid({
+        "base": "III",
+        "cache_tb": [10.0, 20.0, 40.0, 80.0],
+        "egress": ["internet", "direct"],
+        "storage_price": [None, 0.02],
+        "days": 0.75, "n_files": 1000,
+    }), 4)
+    assert len(specs) == 64
+    ref = run_sweep(specs, workers=2)
+    jx = run_sweep(specs, backend="jax")
+    _assert_lane_parity(ref, jx)

@@ -1,7 +1,6 @@
 """Checkpoint/restart + failover tests."""
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -71,8 +70,8 @@ def test_train_driver_resume_equivalence(tmp_path):
     d = str(tmp_path / "ck")
     full = train("qwen3_4b", steps=12, batch=2, seq=16, ckpt_dir=None,
                  use_store=False, log_every=100)
-    part = train("qwen3_4b", steps=10, batch=2, seq=16, ckpt_dir=d,
-                 use_store=False, log_every=100)
+    train("qwen3_4b", steps=10, batch=2, seq=16, ckpt_dir=d,
+          use_store=False, log_every=100)
     resumed = train("qwen3_4b", steps=12, batch=2, seq=16, ckpt_dir=d,
                     resume=True, use_store=False, log_every=100)
     # resumed run covers steps 10..11; loss trajectory must match the tail

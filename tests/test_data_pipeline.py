@@ -1,7 +1,6 @@
 """HCDC tiered store + token pipeline tests."""
 
 import numpy as np
-import pytest
 
 from repro.core.hotcold import ColdDeletionPolicy, MigrationPolicy
 from repro.data.pipeline import SyntheticCorpus, TokenPipeline
@@ -72,7 +71,7 @@ def test_cold_tier_trim_lru():
 def test_pipeline_deterministic_and_restorable():
     corpus = SyntheticCorpus(vocab_size=100, seq_len=8, batch=2, n_shards=6)
     p1 = TokenPipeline(corpus, store=None, epochs=1, seed=3)
-    batches = [next(p1) for _ in range(3)]
+    [next(p1) for _ in range(3)]  # advance three batches
     state = p1.state()
     b4 = next(p1)
     p2 = TokenPipeline(corpus, store=None, epochs=1, seed=3)

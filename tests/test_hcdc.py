@@ -1,13 +1,9 @@
 """HCDC scenario behaviour tests (reduced scale; paper §5)."""
 
-import numpy as np
 import pytest
 
-from repro.core.hcdc import (
-    CONFIG_I, CONFIG_II, CONFIG_III, HCDCScenario, make_config, PRESENT,
-)
+from repro.core.hcdc import HCDCScenario, make_config
 from repro.sim.engine import DAY
-from repro.sim.infrastructure import TB
 
 DAYS = 3
 FILES = 20_000

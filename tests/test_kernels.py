@@ -95,22 +95,15 @@ def test_mamba_scan_carry_across_chunks():
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4)
 
 
-def test_model_ssm_block_matches_kernel():
-    """models.ssm plugged with the Pallas scan == reference scan."""
+def test_model_ssm_block_runs_finite():
+    """Smoke: models.ssm's block runs end-to-end and stays finite (kernel
+    vs. reference parity is covered by the mamba_scan tests above)."""
     from repro.configs import get_smoke_config
     from repro.models.ssm import init_ssm, ssm_block
-    from repro.kernels.mamba_scan.ops import mamba_scan as kscan
-
     cfg = get_smoke_config("falcon_mamba_7b")
     params = init_ssm(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
                           dtype=cfg.dtype)
-
-    def pallas_scan(dA, dBu):
-        # adapter: ssm_block expects h [B,T,D,N]; kernel returns y directly,
-        # so emulate h . C inside by returning h via ref for the test
-        from repro.kernels.mamba_scan.ref import mamba_scan_ref
-        return None  # unused
 
     ref_out = ssm_block(params, cfg, x)
     assert bool(jnp.isfinite(ref_out.astype(jnp.float32)).all())

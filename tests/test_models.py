@@ -11,7 +11,7 @@ import pytest
 
 from repro.configs import ARCHITECTURES, get_config, get_smoke_config
 from repro.launch.mesh import make_debug_mesh
-from repro.models import forward, init_params, loss_fn
+from repro.models import forward, init_params
 from repro.parallel.sharding import ParallelPlan
 from repro.train.train_step import make_train_step
 from repro.train.optimizer import make_optimizer

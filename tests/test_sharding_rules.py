@@ -1,6 +1,5 @@
 """Sharding-rule unit tests (pure logic — duck-typed mesh, no devices)."""
 
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import ParallelPlan, spec_for_param

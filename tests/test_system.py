@@ -1,10 +1,9 @@
 """End-to-end behaviour tests for the paper's system."""
 
 import numpy as np
-import pytest
 
 from repro.core.hcdc import HCDCScenario, make_config
-from repro.core.validation import PAPER_TABLE2, ValidationConfig, ValidationScenario
+from repro.core.validation import ValidationConfig, ValidationScenario
 from repro.sim.engine import DAY, HOUR
 
 

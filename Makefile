@@ -2,7 +2,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench bench-smoke lint clean
+.PHONY: test test-fast bench bench-smoke sweep-demo lint clean
 
 test:
 	$(PY) -m pytest -x -q
@@ -15,6 +15,15 @@ bench:
 
 bench-smoke:
 	FAST=1 BENCH_JSON=BENCH_ci.json $(PY) benchmarks/run.py
+
+# Tiny 2-workload grid (steady vs diurnal) on both sweep backends — the
+# workload-subsystem smoke demo (docs/workloads.md).
+sweep-demo:
+	$(PY) scripts/run_sweep.py --days 0.1 --files 1000 --cache-tb 20 \
+	    --workload steady --workload diurnal:amplitude=0.8 --quiet
+	$(PY) scripts/run_sweep.py --days 0.1 --files 1000 --cache-tb 20 \
+	    --workload steady --workload diurnal:amplitude=0.8 \
+	    --backend jax --quiet
 
 lint:
 	ruff check src tests benchmarks scripts

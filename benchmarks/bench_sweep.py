@@ -14,6 +14,17 @@ fan-out) and raw simulated lanes/sec; ``sweep.jax_speedup`` compares
 batched configs/sec (warm, after the one-off XLA compile reported
 separately as ``cold``) against the process pool measured on an
 evenly-sampled subset of the *same* grid.
+
+Part 3 is the workload-sensitivity panel: one batched grid sweeping the
+``repro.sim.workload`` access-pattern axis on a fixed cache point. Each
+``sweep.workload.<model>`` row's derived column is that model's jobs-done
+relative to the stationary baseline — how much the access-stream *shape*
+(day/night cycles, reprocessing bursts, popularity drift) moves the
+paper's throughput observable at unchanged mean pricing knobs.
+
+Spawned pool workers are pinned to ``JAX_PLATFORMS=cpu`` by
+``run_sweep``'s worker initializer, so the process rows cannot hang
+probing accelerator devices while this process holds them.
 """
 
 from __future__ import annotations
@@ -52,6 +63,36 @@ def _pricing_grid(days: float, n_files: int, n_prices: int, n_seeds: int):
                          "egress": ["internet", "direct", "interconnect"],
                          "storage_price": prices})
     return with_seeds(specs, n_seeds)
+
+
+#: Workload-sensitivity panel: the stationary baseline plus one
+#: representative of each non-stationary family (docs/workloads.md).
+#: Periods are short so the bench's sub-day horizon covers whole waves
+#: (a 24 h period would pin the horizon inside the first peak phase).
+WORKLOAD_PANEL = (
+    "steady",
+    "diurnal:amplitude=0.8,period_h=1.2",
+    "campaign:period_h=1.2,duty=0.25,peak=3,off=0.5",
+    "zipf-drift:power_end=1.5",
+)
+
+
+def _workload_rows(days: float, n_files: int) -> List[Dict]:
+    specs = expand_grid({"base": "III", "days": days, "n_files": n_files,
+                         "cache_tb": 20.0, "workload": list(WORKLOAD_PANEL)})
+    res = run_sweep(specs, backend="jax", tick=JAX_BENCH_TICK)
+    by = {r.spec.workload: r for r in res.results}
+    steady_jobs = max(by["steady"].jobs_done, 1.0)
+    rows = [
+        {"name": f"sweep.workload.{wl.partition(':')[0]}",
+         "us_per_call": res.wall_s / len(specs) * 1e6,
+         "derived": by[wl].jobs_done / steady_jobs}
+        for wl in WORKLOAD_PANEL
+    ]
+    rows.append({"name": f"sweep.workload.batch.{len(specs)}cfg",
+                 "us_per_call": res.wall_s * 1e6,
+                 "derived": res.configs_per_sec})
+    return rows
 
 
 def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
@@ -110,6 +151,7 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
          "us_per_call": warm.wall_s * 1e6,
          "derived": warm_cps / base_cps if base_cps > 0 else 0.0},
     ]
+    rows += _workload_rows(jdays, jfiles)
     return rows
 
 

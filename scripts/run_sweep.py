@@ -9,6 +9,13 @@ Grid from inline axes (comma-separated values expand the grid)::
         --cache-tb 20,50,100 --egress internet,direct,interconnect \
         --seeds 2 --days 1 --files 10000 --out results/sweep.csv
 
+Access-pattern (workload) models are an axis too — repeat ``--workload``
+per model (``docs/workloads.md`` has the catalogue)::
+
+    PYTHONPATH=src python scripts/run_sweep.py \
+        --workload steady --workload diurnal:amplitude=0.8 \
+        --cache-tb 20,50 --days 1 --out results/workloads.csv
+
 or from a YAML/JSON spec file (see docs/simulation.md)::
 
     PYTHONPATH=src python scripts/run_sweep.py --spec sweep.yaml
@@ -59,6 +66,23 @@ def _build_axes(args: argparse.Namespace) -> dict:
         axes["storage_price"] = _floats(args.storage_price)
     if args.rate_scale:
         axes["job_rate_scale"] = _floats(args.rate_scale)
+    if args.workload:
+        # Repeated --workload flags each add one model; a flag without
+        # ':' parameters may also carry a plain comma list. (Parameterized
+        # models embed commas, so those need their own flag.)
+        wl: list = []
+        for tok in args.workload:
+            tok = tok.strip()
+            if ":" in tok:
+                if "," in tok.partition(":")[0]:
+                    raise ValueError(
+                        f"--workload {tok!r}: comma lists cannot include "
+                        "parameterized models (their parameters themselves "
+                        "contain commas) — repeat --workload once per model")
+                wl.append(tok)
+            else:
+                wl += [t.strip() for t in tok.split(",") if t.strip()]
+        axes["workload"] = wl
     return axes
 
 
@@ -82,6 +106,11 @@ def main(argv=None) -> int:
                     help="comma list of USD/GB-month storage prices")
     ap.add_argument("--rate-scale", default="",
                     help="comma list of job-arrival-rate multipliers")
+    ap.add_argument("--workload", action="append", metavar="MODEL",
+                    help="access-pattern model axis; repeat per model "
+                         "(steady | diurnal | campaign | zipf-drift | "
+                         "trace:PATH, parameters as 'name:key=val,...' — "
+                         "see docs/workloads.md). Default: steady")
     ap.add_argument("--seeds", type=int, default=1,
                     help="replica seeds per config (default 1)")
     ap.add_argument("--first-seed", type=int, default=0)

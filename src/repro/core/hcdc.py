@@ -45,6 +45,7 @@ from repro.sim.engine import DAY, HOUR, MINUTE, BaseSimulation, Schedulable
 from repro.sim.infrastructure import GiB, TB, File, NetworkLink, Site, StorageElement
 from repro.sim.output import OutputCollector
 from repro.sim.transfer import EventDrivenTransferService
+from repro.sim.workload import SteadyPoisson, WorkloadModel
 
 # File location states (per site, per file).
 ABSENT, IN_FLIGHT, PRESENT = 0, 1, 2
@@ -74,6 +75,9 @@ class HCDCConfig:
     dur_lam: float = 0.00409
     dur_lo: float = 1000.0  # 16.666 minutes
     popularity: PopularityModel = field(default_factory=PopularityModel)
+    # access-pattern shape: per-tick arrival-rate / popularity-skew schedule
+    # (repro.sim.workload; the steady default is a bit-exact no-op)
+    workload: WorkloadModel = field(default_factory=SteadyPoisson)
     # network (Table 4), bytes/s
     gcs_to_disk: float = 294.00e6
     disk_to_gcs: float = 500.00e6
@@ -145,9 +149,9 @@ class _SiteState:
         size_dist = BoundedExponential(cfg.size_lam, cfg.size_lo, cfg.size_hi, unit=GiB)
         self.sizes = size_dist.sample(rng, n)
         self.pop = cfg.popularity.sample_popularity(rng, n)
-        w = cfg.popularity.selection_weights(self.pop)
-        self.cum_w = np.cumsum(w)
-        self.cum_w /= self.cum_w[-1]
+        self.popularity = cfg.popularity
+        self.cum_w = cfg.popularity.selection_cdf(self.pop)
+        self._cum_w_cache: Dict[float, np.ndarray] = {}
         # location state
         self.disk_state = np.zeros(n, dtype=np.int8)
         self.gcs_state = np.zeros(n, dtype=np.int8)
@@ -175,8 +179,23 @@ class _SiteState:
         self.disk_gcs_bytes = 0.0
         self.gcs_recalls = np.zeros(n, dtype=np.int32)
 
-    def select_file(self, u: float) -> int:
-        return int(np.searchsorted(self.cum_w, u, side="right"))
+    def select_file(self, u: float, power: Optional[float] = None) -> int:
+        return int(np.searchsorted(self.cum_w_for(power), u, side="right"))
+
+    def cum_w_for(self, power: Optional[float]) -> np.ndarray:
+        """Selection CDF for a workload-scheduled popularity power.
+
+        ``None`` keeps the precomputed base CDF (the stationary fast path);
+        drifting workloads quantize the power into a handful of
+        piecewise-constant values, so the cache stays tiny.
+        """
+        if power is None:
+            return self.cum_w
+        cw = self._cum_w_cache.get(power)
+        if cw is None:
+            cw = self.popularity.selection_cdf(self.pop, power=power)
+            self._cum_w_cache[power] = cw
+        return cw
 
 
 class HCDCScenario:
@@ -199,15 +218,22 @@ class HCDCScenario:
                                         throughput=cfg.disk_to_gcs,
                                         max_active=cfg.max_active)
         # Pre-sample job streams (throughput optimization; statistically
-        # identical to per-tick sampling).
+        # identical to per-tick sampling), then modulate them with the
+        # workload schedule. The schedule draws no randomness and the
+        # steady default multiplies by exactly 1.0, so the stationary
+        # workload stays bit-identical to the pre-workload engine.
         n_ticks = cfg.simulated_time // cfg.gen_interval + 1
         self._job_counts = TruncatedNormalCount(cfg.jobs_mu, cfg.jobs_sigma).sample(
             self.rng, (len(self.sites), n_ticks))
+        sched = cfg.workload.compile(n_ticks, cfg.gen_interval)
+        self._job_counts = self._job_counts * sched.rate_mult
+        self._sel_power = sched.sel_power
         self._dur_dist = BoundedExponential(cfg.dur_lam, lo=cfg.dur_lo)
 
     # ------------------------------------------------------------------ jobs
-    def _submit_job(self, sim: BaseSimulation, now: int, st: _SiteState) -> None:
-        fid = st.select_file(float(self.rng.random()))
+    def _submit_job(self, sim: BaseSimulation, now: int, st: _SiteState,
+                    power: Optional[float] = None) -> None:
+        fid = st.select_file(float(self.rng.random()), power)
         job = _Job(fid, now)
         st.jobs_submitted += 1
         st.consumers[fid] += 1
@@ -363,11 +389,13 @@ class HCDCScenario:
                 self.tick = 0
 
             def on_update(self, sim: BaseSimulation, now: int) -> None:
+                power = (None if scenario._sel_power is None
+                         else float(scenario._sel_power[self.tick]))
                 for i, st in enumerate(scenario.sites):
                     scenario._process_deletions(sim, now, st)
                     n = st.counters.emit(scenario._job_counts[i][self.tick])
                     for _ in range(n):
-                        scenario._submit_job(sim, now, st)
+                        scenario._submit_job(sim, now, st, power)
                     scenario._process_waiting(sim, now, st)
                 if scenario.cfg.curves and self.tick % 360 == 0:  # hourly
                     for st in scenario.sites:

@@ -63,6 +63,10 @@ class PopularityModel:
     unique-file footprint reproduces Table 7 (6.75 PB tape->disk per site in
     configuration I; the literal gamma = 1 yields ~2x too many unique files
     — see EXPERIMENTS.md "Calibration").
+
+    A non-stationary workload (``repro.sim.workload.ZipfDrift``) may
+    override the power per generator tick via ``selection_weights``'s
+    ``power`` argument; the static assignment above stays untouched.
     """
 
     p: float = 0.1
@@ -75,5 +79,17 @@ class PopularityModel:
 
         return np.clip(rng.geometric(self.p, n), self.lo, self.hi - 1)
 
-    def selection_weights(self, popularity):
-        return popularity.astype(float) ** self.selection_power
+    def selection_weights(self, popularity, power: Optional[float] = None):
+        p = self.selection_power if power is None else power
+        return popularity.astype(float) ** p
+
+    def selection_cdf(self, popularity, power: Optional[float] = None):
+        """Normalized selection CDF for inverse-transform file draws
+        (``searchsorted(cdf, u, side="right")``). The single definition
+        both engines share — any change to the weighting/normalization
+        stays backend-identical by construction.
+        """
+        import numpy as np
+
+        cw = np.cumsum(self.selection_weights(popularity, power))
+        return cw / cw[-1]

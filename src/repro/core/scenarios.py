@@ -28,6 +28,7 @@ from repro.sim.distributions import BoundedExponential, TruncatedNormalCount
 from repro.sim.engine import DAY
 from repro.sim.infrastructure import GiB, TB
 from repro.sim.transfer import LinkTickTable
+from repro.sim.workload import parse_workload
 
 #: Valid ``ScenarioSpec.egress`` values: tiered internet egress or one of
 #: the paper's §5.3 peering alternatives.
@@ -51,6 +52,10 @@ class ScenarioSpec:
     egress: str = "internet"  # internet | direct | interconnect
     storage_price: Optional[float] = None  # USD per GB-month override
     job_rate_scale: float = 1.0  # scales the job arrival rate
+    # access-pattern model: "steady" | "diurnal" | "campaign" | "zipf-drift"
+    # | "trace:PATH", with optional "name:key=value,..." parameters
+    # (repro.sim.workload.parse_workload syntax; see docs/workloads.md)
+    workload: str = "steady"
     curves: bool = False  # record Fig 6/8 time series
 
     def __post_init__(self) -> None:
@@ -66,6 +71,9 @@ class ScenarioSpec:
         if not self.job_rate_scale or self.job_rate_scale <= 0:
             raise ValueError(
                 f"job_rate_scale must be > 0, got {self.job_rate_scale!r}")
+        # Unknown workload names, bad parameters, and missing/malformed
+        # trace CSVs fail here — at spec-parse time — not in a worker.
+        parse_workload(self.workload)
 
     @property
     def label(self) -> str:
@@ -81,6 +89,8 @@ class ScenarioSpec:
             parts.append(f"stor={self.storage_price:g}")
         if self.job_rate_scale != 1.0:
             parts.append(f"rate={self.job_rate_scale:g}x")
+        if self.workload != "steady":
+            parts.append(f"wl={self.workload}")
         parts.append(f"seed={self.seed}")
         return ",".join(parts)
 
@@ -112,6 +122,7 @@ def build_config(spec: ScenarioSpec) -> HCDCConfig:
         # exactly: max(kX, 0) = k max(X, 0) for k > 0.
         cfg.jobs_mu *= spec.job_rate_scale
         cfg.jobs_sigma *= spec.job_rate_scale
+    cfg.workload = parse_workload(spec.workload)
     return cfg
 
 
@@ -217,6 +228,9 @@ class PackedGrid:
     #: enter the bill, never the simulated dynamics, so specs that differ
     #: only in pricing share one simulated lane and are billed separately
     #: (the paper's §5.3 "compare pricing options on the same workload").
+    #: The ``workload`` axis *does* change the dynamics (it reshapes the
+    #: packed job stream), so workload-only-differing specs never share a
+    #: lane.
     lane_of: np.ndarray  # [n_specs] i32
     # per-lane scenario parameters
     disk_limit: np.ndarray  # [L,S] f32 bytes (inf = unlimited)
@@ -236,6 +250,11 @@ class PackedGrid:
     job_tail: np.ndarray  # [L,S,J] f32: download + run duration, seconds
     jobs_per_tick: np.ndarray  # [L,T,S] i32
     n_jobs: np.ndarray  # [L,S] i32 (true, unpadded counts)
+    #: compiled per-lane workload schedule: the arrival-rate multiplier on
+    #: each *generator* tick (gen_interval spacing, not the simulation
+    #: tick). Already folded into ``jobs_per_tick``/``job_*`` above — kept
+    #: for inspection and cross-backend schedule tests.
+    rate_mult: np.ndarray  # [L,G] f32
     # tick grid (shared by every lane)
     times: np.ndarray  # [T] f32 tick clock values (times[0] == 0)
     dts: np.ndarray  # [T] f32 step durations (dts[0] == 0)
@@ -271,8 +290,11 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
 
     Every lane must share ``days`` and ``n_files`` (they set the shared tick
     count and file-array width); all other axes — cache/GCS limits, egress
-    pricing, storage price, job rate, seed — vary freely per lane.
-    ``curves`` is not supported (time-series live on the event engine).
+    pricing, storage price, job rate, workload model, seed — vary freely
+    per lane (the workload schedule reshapes the packed job stream, so
+    workload-differing specs get distinct dynamics lanes; only pricing-only
+    variants share one). ``curves`` is not supported (time-series live on
+    the event engine).
     """
     specs = list(specs)
     if not specs:
@@ -336,6 +358,7 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
     pop = np.zeros((L, S, F), dtype=np.float32)
     tables = []
     per_lane_jobs = []  # (fid, submit_tick, submit_time, tail) per site
+    rate_mults = []  # [G] per lane: compiled workload arrival schedule
 
     for li, cfg in enumerate(cfgs):
         rng = np.random.default_rng(cfg.seed)
@@ -346,15 +369,18 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
             # Same draw order as ``hcdc._SiteState``: sizes, then popularity.
             sizes[li, si] = size_dist.sample(rng, F)
             pop[li, si] = cfg.popularity.sample_popularity(rng, F)
-            w = cfg.popularity.selection_weights(pop[li, si])
-            cw = np.cumsum(w)
-            cum_ws.append(cw / cw[-1])
+            cum_ws.append(cfg.popularity.selection_cdf(pop[li, si]))
             disk_limit[li, si] = (np.inf if site.disk_limit is None
                                   else site.disk_limit)
-        # Same draw as ``HCDCScenario.__init__``: the pre-sampled job stream.
+        # Same draw as ``HCDCScenario.__init__``: the pre-sampled job
+        # stream, modulated by the (deterministic, RNG-free) workload
+        # schedule exactly as the event engine modulates its own stream.
         n_gen = cfg.simulated_time // cfg.gen_interval + 1
         counts = TruncatedNormalCount(cfg.jobs_mu, cfg.jobs_sigma).sample(
             rng, (S, n_gen))
+        sched = cfg.workload.compile(n_gen, cfg.gen_interval)
+        counts = counts * sched.rate_mult
+        rate_mults.append(sched.rate_mult.astype(np.float32))
         gen_times = np.arange(n_gen, dtype=np.float64) * cfg.gen_interval
         dur_dist = BoundedExponential(cfg.dur_lam, lo=cfg.dur_lo)
         lane_jobs = []
@@ -364,7 +390,22 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
             j_times = np.repeat(gen_times, emitted)
             u = rng.random(len(j_times))
             durs = dur_dist.sample(rng, len(j_times))
-            fid = np.searchsorted(cum_ws[si], u, side="right").astype(np.int32)
+            if sched.sel_power is None:
+                fid = np.searchsorted(cum_ws[si], u,
+                                      side="right").astype(np.int32)
+            else:
+                # Popularity drift: each job selects with the power of its
+                # generator tick. Powers are piecewise constant (a few
+                # distinct values), so one CDF per value suffices — the
+                # same quantization the event engine's cum_w cache uses.
+                j_power = sched.sel_power[np.repeat(np.arange(n_gen),
+                                                    emitted)]
+                fid = np.zeros(len(u), dtype=np.int32)
+                for p in np.unique(j_power):
+                    cdf = cfg.popularity.selection_cdf(pop[li, si],
+                                                      power=float(p))
+                    sel = j_power == p
+                    fid[sel] = np.searchsorted(cdf, u[sel], side="right")
             dl = sizes[li, si, fid].astype(np.float64) / cfg.download
             tail = np.maximum(1, (dl + durs).astype(np.int64))
             j_tick = np.searchsorted(grid, j_times, side="left").astype(np.int32)
@@ -425,6 +466,7 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
         job_tail=job_tail,
         jobs_per_tick=jobs_per_tick,
         n_jobs=n_jobs,
+        rate_mult=np.stack(rate_mults),
         times=times,
         dts=dts,
         month_idx=month_idx,

@@ -11,7 +11,10 @@ implementations plus an analytic event-driven fast path) and
 ``distributions`` the bounded random samplers fitted in Tables 1/3.
 ``sweep`` is the batched scenario-sweep engine for the §5.3 decision
 workflow (grids of configs -> cost/throughput frontier); ``batched`` is
-its vectorized lane-per-scenario JAX backend (``backend="jax"``).
+its vectorized lane-per-scenario JAX backend (``backend="jax"``);
+``workload`` holds the pluggable access-pattern generators (diurnal /
+campaign / popularity-drift / trace-replay arrival schedules) both
+backends consume.
 """
 
 from repro.sim.engine import BaseSimulation, Schedulable
@@ -37,6 +40,17 @@ from repro.sim.sweep import (
     run_scenario,
     run_sweep,
 )
+from repro.sim.workload import (
+    WORKLOADS,
+    Campaign,
+    Diurnal,
+    SteadyPoisson,
+    TraceReplay,
+    WorkloadModel,
+    WorkloadSchedule,
+    ZipfDrift,
+    parse_workload,
+)
 
 __all__ = [
     "BaseSimulation",
@@ -58,4 +72,13 @@ __all__ = [
     "pareto_indices",
     "run_scenario",
     "run_sweep",
+    "WORKLOADS",
+    "WorkloadModel",
+    "WorkloadSchedule",
+    "SteadyPoisson",
+    "Diurnal",
+    "Campaign",
+    "ZipfDrift",
+    "TraceReplay",
+    "parse_workload",
 ]

@@ -13,6 +13,15 @@ existing ``GCSCostModel`` / ``MonthlyBill`` machinery on the way out, so
 ``backend="jax"`` returns the same ``SweepResult`` shape as the process
 backend.
 
+Workloads (``repro.sim.workload``): a spec's access-pattern model
+compiles to a deterministic per-generator-tick rate/popularity schedule
+that ``pack_specs`` folds into the packed per-lane job stream
+(``jobs_per_tick``, ``job_*``; the multipliers are exported as
+``PackedGrid.rate_mult``), so non-stationary arrival shapes ride through
+this backend with zero device-program changes and the grid stays a single
+jit+vmap program. Workload-differing specs get distinct dynamics lanes;
+only pricing-only variants share one.
+
 Fidelity contract (cross-validated in ``tests/test_batched.py``): the
 packed grid replicates the reference engine's catalogue and job-arrival
 randomness draw-for-draw, while per-job file selection and run durations

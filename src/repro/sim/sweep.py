@@ -89,6 +89,19 @@ class ScenarioResult:
         return r
 
 
+def _worker_init() -> None:
+    """Initializer for spawned sweep workers.
+
+    Pin JAX (should any import chain pull it in) to CPU before the worker
+    touches a task: an accelerator-probing child process can hang on
+    device initialization while the parent holds the device — the same
+    failure class as the moe multi-device subprocess hang. An inherited
+    JAX_PLATFORMS (e.g. the parent exported ``tpu``) is deliberately
+    overridden: workers only ever need numpy, so CPU is always right.
+    """
+    os.environ["JAX_PLATFORMS"] = "cpu"
+
+
 def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
     """Build and run one configuration; the sweep's unit of work.
 
@@ -255,7 +268,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
         # make forked children deadlock-prone; the sweep worker itself only
         # needs numpy, so spawn startup stays cheap.
         ctx = multiprocessing.get_context("spawn")
-        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
+                                 initializer=_worker_init) as pool:
             futures = {pool.submit(run_scenario, s): i
                        for i, s in enumerate(specs)}
             done = 0

@@ -83,6 +83,30 @@ def test_pack_specs_deduplicates_pricing_lanes():
     assert len(grid.cost_models) == 12
 
 
+def test_pack_specs_workload_gets_own_dynamics_lane():
+    """Workload reshapes the simulated job stream, so workload-only
+    variants must NOT share a lane — unlike pricing-only variants."""
+    specs = expand_grid({
+        "base": "III", "cache_tb": 15.0,
+        "workload": ["steady", "diurnal:amplitude=0.8"],
+        "egress": ["internet", "direct"], **TINY,
+    })
+    grid = pack_specs(specs)
+    assert grid.n_specs == 4
+    assert grid.n_lanes == 2  # workload splits, egress does not
+    # the compiled schedule is exported per lane: steady is exactly ones,
+    # the diurnal lane is mean-preserving but non-constant
+    steady_lane = int(grid.lane_of[specs.index(next(
+        s for s in specs if s.workload == "steady"))])
+    assert (grid.rate_mult[steady_lane] == 1.0).all()
+    # (the 0.25-day horizon covers the rising quarter of the default
+    # 24 h diurnal period, so the lane is >= 1 but clearly non-constant)
+    other = grid.rate_mult[1 - steady_lane]
+    assert other.max() > 1.5 and other.max() > other.min()
+    # modulated lanes still carry jobs
+    assert (grid.n_jobs > 0).all()
+
+
 def test_pack_specs_rejects_nonuniform_and_curves():
     with pytest.raises(ValueError, match="uniform 'days'"):
         pack_specs([ScenarioSpec(days=0.25, n_files=100),
@@ -180,6 +204,86 @@ def test_jax_backend_tick_coarsening_stays_close(small_grid):
                 f"tick={tick}: {a.spec.label}"
             assert _close(a.cost_usd, b.cost_usd, cost_tol), \
                 f"tick={tick}: {a.spec.label}"
+
+
+# ------------------------------------------------------- workload parity
+@pytest.fixture(scope="module")
+def workload_grid(tmp_path_factory):
+    """One spec per workload model (incl. a CSV trace), both backends."""
+    trace = tmp_path_factory.mktemp("wl") / "trace.csv"
+    trace.write_text("time_s,rate_mult\n0,1.5\n7200,0.5\n14400,2.0\n")
+    wls = [
+        "steady",
+        "diurnal:amplitude=0.8,period_h=3",
+        "campaign:period_h=2,duty=0.25,peak=2.5,off=0.5",
+        "zipf-drift:power_end=1.5,steps=4",
+        f"trace:{trace}",
+    ]
+    specs = [ScenarioSpec(base="III", cache_tb=15.0, seed=0, workload=w,
+                          **TINY) for w in wls]
+    ref = run_sweep(specs, workers=2)
+    jx = run_sweep(specs, backend="jax")
+    return ref, jx
+
+
+def test_workload_models_match_reference_per_lane(workload_grid):
+    """Every workload model agrees across backends: jobs at the Table 2
+    bar; cost at the doubled bar, because at this 0.25-day quick-test
+    horizon the reference engine's own cost realization noise is ~±6%
+    (see the acceptance-grid note below) and rate modulation churns the
+    cache harder. The slow 0.75-day test below applies the full 5% bar."""
+    ref, jx = workload_grid
+    for a, b in zip(ref.results, jx.results):
+        lbl = a.spec.label
+        assert _close(a.jobs_done, b.jobs_done, TOL), \
+            f"{lbl}: jobs_done {a.jobs_done} vs {b.jobs_done}"
+        assert _close(a.cost_usd, b.cost_usd, 2 * TOL), \
+            f"{lbl}: cost {a.cost_usd} vs {b.cost_usd}"
+        assert _close(a.metrics["download_pb"], b.metrics["download_pb"],
+                      TOL, floor=1e-6), f"{lbl}: download_pb"
+
+
+@pytest.mark.slow
+def test_workload_models_acceptance_full_bar(tmp_path):
+    """ISSUE 3 acceptance: per-lane jobs-done and bill totals for every
+    workload model match across backends within the Table 2 5% tolerance
+    (0.75-day horizon, where reference realization noise is ~±2%)."""
+    trace = tmp_path / "trace.csv"
+    trace.write_text("time_s,rate_mult\n0,1.5\n21600,0.5\n43200,2.0\n")
+    wls = [
+        "steady",
+        "diurnal:amplitude=0.8,period_h=3",
+        "campaign:period_h=2,duty=0.25,peak=2.5,off=0.5",
+        "zipf-drift:power_end=1.5,steps=4",
+        f"trace:{trace}",
+    ]
+    specs = [ScenarioSpec(base="III", cache_tb=15.0, seed=0, workload=w,
+                          days=0.75, n_files=1000) for w in wls]
+    ref = run_sweep(specs, workers=2)
+    jx = run_sweep(specs, backend="jax")
+    _assert_lane_parity(ref, jx)
+
+
+def test_workload_job_streams_identical_across_backends(workload_grid):
+    """Both backends derive the arrival stream from the same modulated
+    count draws, so submissions match exactly, not just statistically."""
+    ref, jx = workload_grid
+    for a, b in zip(ref.results, jx.results):
+        assert a.metrics["jobs_submitted"] == b.metrics["jobs_submitted"], \
+            a.spec.workload
+
+
+def test_workload_shapes_move_the_observables(workload_grid):
+    """The axis actually does something: the trace's long-run mean is 4/3
+    (1.5/0.5/2.0 over equal thirds), while the mean-1 shapes (diurnal and
+    campaign over whole periods, rate-neutral zipf drift) keep the total."""
+    ref, _ = workload_grid
+    by = {r.spec.workload.partition(":")[0]: r for r in ref.results}
+    steady = by["steady"].metrics["jobs_submitted"]
+    assert by["trace"].metrics["jobs_submitted"] > 1.2 * steady
+    assert by["zipf-drift"].metrics["jobs_submitted"] == steady
+    assert by["campaign"].metrics["jobs_submitted"] == \
+        pytest.approx(steady, rel=0.05)
 
 
 # ------------------------------------------- acceptance grid (64 configs)

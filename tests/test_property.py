@@ -34,6 +34,39 @@ def test_bounded_exponential_within_bounds(lam, lo, hi, seed):
     assert (x >= lo).all() and (x <= hi).all()
 
 
+@given(st.floats(0.05, 3.0), st.floats(0.01, 2.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=25)
+def test_truncated_normal_fractional_carry_preserves_rate(mu, sigma, seed):
+    """The generator pipeline — truncated-normal count samples emitted
+    through the fractional-remainder carry — preserves the long-run rate:
+    total integer emissions track both the sampled total (within the one
+    carried fraction) and the analytic clamped-normal mean."""
+    d = TruncatedNormalCount(mu, sigma)
+    rng = np.random.default_rng(seed)
+    xs = d.sample(rng, 4000)
+    counter = FractionalCounter()
+    emitted = sum(counter.emit(x) for x in xs)
+    assert abs(emitted - xs.sum()) < 1.0  # only the carry is ever pending
+    assert 0.0 <= counter.acc < 1.0
+    # long-run emission rate ~ the distribution mean (law of large numbers
+    # bound: generous 5 sigma / sqrt(n) envelope keeps flakiness ~zero)
+    assert abs(emitted / len(xs) - d.mean) \
+        <= 5.0 * max(sigma, 0.05) / np.sqrt(len(xs)) + 1.0 / len(xs)
+
+
+@given(st.floats(0.001, 5.0), st.floats(0.0, 1.0), st.floats(1.5, 100.0),
+       st.sampled_from([1.0, 1e6, GiB]), st.integers(0, 2**31 - 1))
+def test_bounded_exponential_clamps_scaled_by_unit(lam, lo, hi, unit, seed):
+    """Samples always land in [lo, hi] x unit — the clamp applies before
+    the unit scaling (sizes are drawn in GiB and stored in bytes)."""
+    d = BoundedExponential(lam, lo, hi, unit=unit)
+    rng = np.random.default_rng(seed)
+    x = d.sample(rng, 200)
+    assert (x >= lo * unit).all() and (x <= hi * unit).all()
+    scalar = d.sample(rng)  # n=None: scalar draw obeys the same clamp
+    assert lo * unit <= scalar <= hi * unit
+
+
 @given(st.floats(0.01, 3.0), st.floats(0.01, 2.0), st.integers(0, 2**31 - 1))
 @settings(max_examples=25)
 def test_truncated_normal_mean_formula(mu, sigma, seed):

@@ -74,6 +74,21 @@ def test_spec_validates_fields():
         ScenarioSpec(egress="carrier-pigeon")
 
 
+def test_workload_axis_expands_and_validates():
+    """The workload axis sweeps like any other spec field, and bad models
+    fail at mapping-parse time (not inside a worker)."""
+    specs = specs_from_mapping({
+        "days": 0.5, "n_files": 100,
+        "axes": {"workload": ["steady", "diurnal:amplitude=0.5"],
+                 "seed": [0, 1]},
+    })
+    assert len(specs) == 4
+    assert {s.workload for s in specs} == {"steady", "diurnal:amplitude=0.5"}
+    with pytest.raises(ValueError, match="unknown workload"):
+        specs_from_mapping({"days": 0.5,
+                            "scenarios": [{"workload": "stampede"}]})
+
+
 def test_with_seeds_replicates():
     specs = with_seeds([ScenarioSpec(cache_tb=5.0)], 3, first_seed=10)
     assert [s.seed for s in specs] == [10, 11, 12]

@@ -1,0 +1,214 @@
+"""Workload-subsystem tests: schedule math, spec-parse validation, and
+event-engine physics of the non-stationary access patterns."""
+
+import numpy as np
+import pytest
+
+from repro.core.scenarios import ScenarioSpec, build_config
+from repro.sim.sweep import run_scenario
+from repro.sim.workload import (
+    Campaign,
+    Diurnal,
+    SteadyPoisson,
+    ZipfDrift,
+    parse_workload,
+)
+
+TINY = dict(days=0.1, n_files=500)
+
+
+# ---------------------------------------------------------------- schedules
+def test_steady_schedule_is_exact_identity():
+    """The steady default must be a bitwise no-op on the count stream —
+    the regression-identity guarantee for pre-workload results."""
+    sched = SteadyPoisson().compile(1000, 10.0)
+    assert (sched.rate_mult == 1.0).all()
+    assert sched.sel_power is None
+    counts = np.maximum(np.random.default_rng(0).normal(0.63, 0.37, 1000), 0)
+    assert ((counts * sched.rate_mult) == counts).all()  # bitwise
+
+
+def test_diurnal_schedule_mean_preserving_and_bounded():
+    # 1 h period on a 10 s grid: one full period every 360 ticks
+    sched = Diurnal(amplitude=1.0, period_h=1.0).compile(3600, 10.0)
+    assert sched.rate_mult.min() >= 0.0
+    assert sched.rate_mult.max() <= 2.0
+    assert sched.rate_mult[:3600 // 10 * 10].mean() == pytest.approx(1.0, abs=1e-9)
+    # phase shifts the wave
+    shifted = Diurnal(amplitude=1.0, period_h=1.0, phase_h=0.25).compile(360, 10.0)
+    assert not np.allclose(shifted.rate_mult, sched.rate_mult[:360])
+
+
+def test_campaign_schedule_duty_cycle():
+    sched = Campaign(period_h=1.0, duty=0.25, peak=3.0, off=0.5).compile(720, 10.0)
+    assert set(np.unique(sched.rate_mult)) == {0.5, 3.0}
+    assert (sched.rate_mult == 3.0).mean() == pytest.approx(0.25)
+    # peak phase leads each period
+    assert (sched.rate_mult[:90] == 3.0).all()
+    assert (sched.rate_mult[90:360] == 0.5).all()
+
+
+def test_zipf_drift_schedule_steps_between_powers():
+    sched = ZipfDrift(power_start=3.5, power_end=1.5, steps=5).compile(500, 10.0)
+    assert (sched.rate_mult == 1.0).all()  # rate untouched
+    powers = np.unique(sched.sel_power)
+    assert len(powers) == 5
+    assert sched.sel_power[0] == pytest.approx(3.5)
+    assert sched.sel_power[-1] == pytest.approx(1.5)
+    assert (np.diff(sched.sel_power) <= 0).all()  # monotone drift
+
+
+def test_zipf_drift_reaches_power_end_on_short_horizons():
+    """steps clamps to the tick count, so the drift always lands on
+    power_end even when segments would be shorter than a tick."""
+    sched = ZipfDrift(power_start=3.0, power_end=1.0, steps=8).compile(5, 10.0)
+    assert sched.sel_power[0] == pytest.approx(3.0)
+    assert sched.sel_power[-1] == pytest.approx(1.0)
+
+
+def test_trace_schedule_step_function_and_hold(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("time_s,rate_mult\n0,1.0\n100,2.0\n250,0.5\n")
+    sched = parse_workload(f"trace:{p}").compile(40, 10.0)
+    assert (sched.rate_mult[:10] == 1.0).all()
+    assert (sched.rate_mult[10:25] == 2.0).all()
+    assert (sched.rate_mult[25:] == 0.5).all()  # last value held
+    # a trace starting after t=0 backfills with its first value
+    q = tmp_path / "late.csv"
+    q.write_text("time_s,rate_mult\n50,4.0\n")
+    late = parse_workload(f"trace:{q}").compile(10, 10.0)
+    assert (late.rate_mult == 4.0).all()
+
+
+# --------------------------------------------------- parse-time validation
+def test_parse_workload_rejects_unknown_names_and_params():
+    with pytest.raises(ValueError, match="unknown workload 'poison'"):
+        parse_workload("poison")
+    with pytest.raises(ValueError, match="unknown parameter"):
+        parse_workload("diurnal:amp=0.5")
+    with pytest.raises(ValueError, match="is not a number"):
+        parse_workload("diurnal:amplitude=big")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_workload("campaign:duty")
+
+
+def test_parse_workload_rejects_out_of_range_params():
+    with pytest.raises(ValueError, match="amplitude"):
+        parse_workload("diurnal:amplitude=1.5")
+    with pytest.raises(ValueError, match="duty"):
+        parse_workload("campaign:duty=0")
+    with pytest.raises(ValueError, match="steps"):
+        parse_workload("zipf-drift:steps=0")
+    with pytest.raises(ValueError, match="steps"):
+        parse_workload("zipf-drift:steps=1")  # can't drift in one segment
+    with pytest.raises(ValueError, match="powers must be > 0"):
+        parse_workload("zipf-drift:power_end=-1")
+
+
+def test_parse_workload_trace_errors_are_actionable(tmp_path):
+    with pytest.raises(ValueError, match="needs a CSV path"):
+        parse_workload("trace")
+    with pytest.raises(ValueError, match="not found"):
+        parse_workload("trace:/no/such/file.csv")
+    bad_header = tmp_path / "h.csv"
+    bad_header.write_text("tick,mult\n0,1\n")
+    with pytest.raises(ValueError, match="header"):
+        parse_workload(f"trace:{bad_header}")
+    not_numeric = tmp_path / "n.csv"
+    not_numeric.write_text("time_s,rate_mult\n0,fast\n")
+    with pytest.raises(ValueError, match="not numeric"):
+        parse_workload(f"trace:{not_numeric}")
+    unsorted = tmp_path / "u.csv"
+    unsorted.write_text("time_s,rate_mult\n100,1\n50,2\n")
+    with pytest.raises(ValueError, match="does not increase"):
+        parse_workload(f"trace:{unsorted}")
+    negative = tmp_path / "neg.csv"
+    negative.write_text("time_s,rate_mult\n0,-1\n")
+    with pytest.raises(ValueError, match="negative rate_mult"):
+        parse_workload(f"trace:{negative}")
+    empty = tmp_path / "e.csv"
+    empty.write_text("time_s,rate_mult\n")
+    with pytest.raises(ValueError, match="no data rows"):
+        parse_workload(f"trace:{empty}")
+
+
+def test_trace_reparsed_when_file_changes(tmp_path):
+    """Editing a trace CSV must be picked up (and re-validated) by the
+    next parse — trace models bypass the parse_workload cache."""
+    p = tmp_path / "t.csv"
+    p.write_text("time_s,rate_mult\n0,1.0\n")
+    assert parse_workload(f"trace:{p}").compile(5, 10.0).rate_mult[0] == 1.0
+    # different length, so the (path, mtime, size) cache key always moves
+    # even on filesystems with coarse mtime granularity
+    p.write_text("time_s,rate_mult\n0,3.25\n")
+    assert parse_workload(f"trace:{p}").compile(5, 10.0).rate_mult[0] == 3.25
+    p.write_text("time_s,rate_mult\nnope\n")
+    with pytest.raises(ValueError, match="malformed"):
+        parse_workload(f"trace:{p}")
+
+
+def test_scenario_spec_validates_workload_at_parse_time():
+    """The sweep fails up front on a bad workload — never in a worker."""
+    with pytest.raises(ValueError, match="unknown workload"):
+        ScenarioSpec(workload="flashmob", **TINY)
+    with pytest.raises(ValueError, match="amplitude"):
+        ScenarioSpec(workload="diurnal:amplitude=7", **TINY)
+    with pytest.raises(ValueError, match="not found"):
+        ScenarioSpec(workload="trace:/missing.csv", **TINY)
+
+
+def test_spec_label_and_config_carry_workload():
+    spec = ScenarioSpec(workload="diurnal:amplitude=0.8", **TINY)
+    assert "wl=diurnal:amplitude=0.8" in spec.label
+    assert "wl=" not in ScenarioSpec(**TINY).label  # steady stays implicit
+    cfg = build_config(spec)
+    assert cfg.workload == Diurnal(amplitude=0.8)
+    assert spec.to_dict()["workload"] == "diurnal:amplitude=0.8"
+
+
+# -------------------------------------------------- event-engine physics
+def test_campaign_duty_cycle_scales_submissions():
+    """peak=1/off=0 at duty=0.5 halves the arrival stream."""
+    steady = run_scenario(ScenarioSpec(base="I", **TINY))
+    half = run_scenario(ScenarioSpec(
+        base="I", workload="campaign:period_h=0.5,duty=0.5,peak=1,off=0",
+        **TINY))
+    ratio = half.metrics["jobs_submitted"] / steady.metrics["jobs_submitted"]
+    assert 0.4 < ratio < 0.6
+
+
+def test_diurnal_preserves_long_run_rate():
+    """Full-period sinusoid: same total submissions within a few %."""
+    steady = run_scenario(ScenarioSpec(base="I", **TINY))
+    # horizon 0.1 d = 2.4 h -> integer number of 0.6 h periods
+    diurnal = run_scenario(ScenarioSpec(
+        base="I", workload="diurnal:amplitude=1,period_h=0.6", **TINY))
+    ratio = (diurnal.metrics["jobs_submitted"]
+             / steady.metrics["jobs_submitted"])
+    assert 0.93 < ratio < 1.07
+
+
+def test_zipf_drift_widens_unique_file_footprint():
+    """Flattening popularity over time touches more unique files, so more
+    cold (tape) traffic at the same arrival rate."""
+    spec = ScenarioSpec(base="II", cache_tb=15.0, **TINY)
+    steady = run_scenario(spec)
+    drift = run_scenario(ScenarioSpec(
+        base="II", cache_tb=15.0,
+        workload="zipf-drift:power_start=3.5,power_end=1,steps=4", **TINY))
+    assert (drift.metrics["jobs_submitted"]
+            == steady.metrics["jobs_submitted"])  # rate untouched
+    tape = [sum(r.metrics[k] for k in r.metrics
+                if k.endswith(".tape_to_disk_pb")) for r in (drift, steady)]
+    assert tape[0] > tape[1]
+
+
+def test_trace_replay_doubles_rate(tmp_path):
+    p = tmp_path / "x2.csv"
+    p.write_text("time_s,rate_mult\n0,2.0\n")
+    steady = run_scenario(ScenarioSpec(base="I", **TINY))
+    doubled = run_scenario(ScenarioSpec(base="I", workload=f"trace:{p}",
+                                        **TINY))
+    ratio = (doubled.metrics["jobs_submitted"]
+             / steady.metrics["jobs_submitted"])
+    assert 1.9 < ratio < 2.1

@@ -2,7 +2,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench bench-smoke sweep-demo lint clean
+.PHONY: test test-fast bench bench-baseline bench-smoke sweep-demo lint clean
 
 test:
 	$(PY) -m pytest -x -q
@@ -10,11 +10,21 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+# Full-scale benchmarks. BENCH_JSON defaults to BENCH_4.json for local
+# trajectory tracking; note the *committed* BENCH_4.json is smoke-scale
+# (fast=true, what CI compares against) — refresh it with
+# `make bench-baseline`, not `make bench`, or the CI diff will fail on
+# the scale mismatch.
 bench:
-	$(PY) benchmarks/run.py
+	BENCH_JSON=$${BENCH_JSON:-BENCH_4.json} $(PY) benchmarks/run.py
+
+# Regenerate the committed perf baseline at the CI smoke scale.
+bench-baseline:
+	FAST=1 BENCH_JSON=BENCH_4.json $(PY) benchmarks/run.py
 
 bench-smoke:
 	FAST=1 BENCH_JSON=BENCH_ci.json $(PY) benchmarks/run.py
+	$(PY) scripts/check_bench_regression.py BENCH_4.json BENCH_ci.json
 
 # Tiny 2-workload grid (steady vs diurnal) on both sweep backends — the
 # workload-subsystem smoke demo (docs/workloads.md).

@@ -15,7 +15,13 @@ batched configs/sec (warm, after the one-off XLA compile reported
 separately as ``cold``) against the process pool measured on an
 evenly-sampled subset of the *same* grid.
 
-Part 3 is the workload-sensitivity panel: one batched grid sweeping the
+Part 3 is the lane-scaling panel (``sweep.jax.lane_scaling.<N>lane``):
+simulated lanes/sec at 16/64/256-lane grids, executed through the
+bounded-memory ``lane_chunk`` path so every grid size reuses one compiled
+chunk program. CI diffs the warm/lanes-per-sec rows against the committed
+``BENCH_4.json`` baseline (``scripts/check_bench_regression.py``).
+
+Part 4 is the workload-sensitivity panel: one batched grid sweeping the
 ``repro.sim.workload`` access-pattern axis on a fixed cache point. Each
 ``sweep.workload.<model>`` row's derived column is that model's jobs-done
 relative to the stationary baseline — how much the access-stream *shape*
@@ -34,7 +40,7 @@ import os
 from dataclasses import replace
 from typing import Dict, List, Optional
 
-from repro.core.scenarios import expand_grid, with_seeds
+from repro.core.scenarios import ScenarioSpec, expand_grid, with_seeds
 from repro.sim.sweep import run_sweep
 
 #: Clock step (seconds) for the batched-backend throughput rows. Coarser
@@ -75,6 +81,35 @@ WORKLOAD_PANEL = (
     "campaign:period_h=1.2,duty=0.25,peak=3,off=0.5",
     "zipf-drift:power_end=1.5",
 )
+
+
+#: Fixed chunk size for the lane-scaling rows: every grid size reuses the
+#: same compiled chunk program, so the scaling panel pays one XLA compile
+#: and the rows measure pure execution throughput.
+LANE_SCALING_CHUNK = 16
+
+
+def _lane_scaling_rows(days: float, n_files: int,
+                       lane_counts: List[int]) -> List[Dict]:
+    """``sweep.jax.lane_scaling.<N>lane``: simulated dynamics lanes/sec at
+    growing grid sizes, executed through the bounded-memory lane-chunked
+    path (ISSUE 4). Each lane is a distinct seed, so nothing dedupes."""
+    rows = []
+    for n in lane_counts:
+        specs = with_seeds([ScenarioSpec(base="III", days=days,
+                                         n_files=n_files, cache_tb=20.0)], n)
+        # Absorb the compile with the full grid itself: a sliced warm-up
+        # can bucket K/J to a smaller power of two and leave an XLA
+        # recompile inside the timed run. After the first grid size, the
+        # shapes usually hit the cache and this run is nearly free.
+        run_sweep(specs, backend="jax", tick=JAX_BENCH_TICK,
+                  lane_chunk=LANE_SCALING_CHUNK)
+        warm = run_sweep(specs, backend="jax", tick=JAX_BENCH_TICK,
+                         lane_chunk=LANE_SCALING_CHUNK)
+        rows.append({"name": f"sweep.jax.lane_scaling.{n}lane",
+                     "us_per_call": warm.wall_s / n * 1e6,
+                     "derived": n / warm.wall_s if warm.wall_s > 0 else 0.0})
+    return rows
 
 
 def _workload_rows(days: float, n_files: int) -> List[Dict]:
@@ -151,6 +186,8 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
          "us_per_call": warm.wall_s * 1e6,
          "derived": warm_cps / base_cps if base_cps > 0 else 0.0},
     ]
+    rows += _lane_scaling_rows(0.1, jfiles,
+                               [16, 64] if fast else [16, 64, 256])
     rows += _workload_rows(jdays, jfiles)
     return rows
 

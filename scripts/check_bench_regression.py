@@ -1,0 +1,93 @@
+"""Diff a fresh benchmark JSON against the committed perf baseline.
+
+Compares the ``derived`` column (throughput: higher is better) of selected
+rows by name prefix and fails when any regresses by more than the allowed
+fraction. Row names embed grid sizes (``sweep.jax.warm.216cfg8lane``), so
+matching is by prefix; a prefix present in only one file is reported and
+skipped (grid shapes legitimately change across PRs).
+
+Baselines are only comparable at the same scale: if the two files disagree
+on the ``fast`` flag (smoke vs full benchmark scale), the check FAILS with
+an actionable message — a mis-scaled committed baseline would otherwise
+permanently self-disable the gate. Regenerate the committed baseline with
+``make bench-baseline`` (FAST scale, matching CI's bench-smoke job).
+
+Usage (the CI bench-smoke job and ``make bench-smoke`` run this)::
+
+    python scripts/check_bench_regression.py BENCH_4.json BENCH_ci.json \
+        [--rows sweep.jax.warm sweep.jax.lanes_per_sec] [--max-regression 0.3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: Rows that gate CI (prefix match). Throughput of the batched backend is
+#: the perf trajectory this repo tracks (ISSUE 4 acceptance).
+DEFAULT_ROWS = ("sweep.jax.warm", "sweep.jax.lanes_per_sec")
+
+
+def _find(doc: dict, prefix: str):
+    rows = [b for b in doc.get("benches", [])
+            if b["name"] == prefix or b["name"].startswith(prefix + ".")]
+    return rows[0] if rows else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail on benchmark throughput regression vs baseline")
+    ap.add_argument("baseline", help="committed baseline JSON (BENCH_4.json)")
+    ap.add_argument("current", help="freshly produced JSON (BENCH_ci.json)")
+    ap.add_argument("--rows", nargs="+", default=list(DEFAULT_ROWS),
+                    help="row-name prefixes to compare (derived column)")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="allowed fractional drop in derived throughput "
+                         "(default 0.30)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except OSError as e:
+        print(f"bench-diff: no baseline ({e}); skipping", file=sys.stderr)
+        return 0
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    if base.get("fast") != cur.get("fast"):
+        print(f"bench-diff: scale mismatch (baseline fast={base.get('fast')}"
+              f", current fast={cur.get('fast')}) — the committed baseline "
+              "must match the comparison scale; regenerate it with "
+              "`make bench-baseline`", file=sys.stderr)
+        return 1
+
+    failures = []
+    for prefix in args.rows:
+        b, c = _find(base, prefix), _find(cur, prefix)
+        if b is None or c is None:
+            print(f"bench-diff: {prefix}: missing in "
+                  f"{'baseline' if b is None else 'current'}; skipped")
+            continue
+        old, new = float(b["derived"]), float(c["derived"])
+        if old <= 0:
+            print(f"bench-diff: {prefix}: non-positive baseline {old}; "
+                  "skipped")
+            continue
+        change = (new - old) / old
+        status = "OK"
+        if change < -args.max_regression:
+            status = "REGRESSION"
+            failures.append(prefix)
+        print(f"bench-diff: {prefix}: {old:.4g} -> {new:.4g} "
+              f"({change:+.1%}) {status}")
+    if failures:
+        print(f"bench-diff: FAILED rows: {', '.join(failures)} "
+              f"(allowed drop {args.max_regression:.0%})", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

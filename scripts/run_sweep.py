@@ -126,6 +126,12 @@ def main(argv=None) -> int:
                     help="jax backend clock step in seconds (default 10, "
                          "the paper's generator interval; larger ticks "
                          "trade temporal resolution for speed)")
+    ap.add_argument("--lane-chunk", type=int, default=None, metavar="N",
+                    help="jax backend: simulate at most N dynamics lanes "
+                         "per device dispatch (bounded memory for large "
+                         "grids, one compile reused across chunks; "
+                         "per-lane results are bitwise identical to the "
+                         "unchunked run). Default: all lanes at once")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes (default: all CPUs)")
     ap.add_argument("--out", default="", help="write the full table as CSV")
@@ -159,9 +165,14 @@ def main(argv=None) -> int:
         print("error: the grid expanded to 0 configs", file=sys.stderr)
         return 2
 
+    if args.lane_chunk is not None and args.backend != "jax":
+        print("error: --lane-chunk requires --backend jax", file=sys.stderr)
+        return 2
     if args.backend == "jax":
+        chunk = ("" if args.lane_chunk is None
+                 else f", lane_chunk={args.lane_chunk}")
         print(f"sweep: {len(specs)} configs, backend=jax "
-              f"(tick={args.tick:g}s)", flush=True)
+              f"(tick={args.tick:g}s{chunk})", flush=True)
     else:
         workers = (min(len(specs), os.cpu_count() or 1)
                    if args.workers is None else args.workers)
@@ -176,7 +187,8 @@ def main(argv=None) -> int:
 
     try:
         result = run_sweep(specs, workers=args.workers, progress=progress,
-                           backend=args.backend, tick=args.tick)
+                           backend=args.backend, tick=args.tick,
+                           lane_chunk=args.lane_chunk)
     except ValueError as e:  # e.g. non-uniform grid on the jax backend
         print(f"error: {e}", file=sys.stderr)
         return 2

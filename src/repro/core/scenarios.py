@@ -200,6 +200,16 @@ def with_seeds(specs: Iterable[ScenarioSpec], n_seeds: int,
 # Spec grid -> dense lane arrays (the ``backend="jax"`` packing).
 # --------------------------------------------------------------------------
 
+def _pow2_bucket(n: int) -> int:
+    """Round ``n`` up to the next power of two (0 stays 0).
+
+    The batched backend's compiled-program cache keys on array shapes;
+    bucketing the data-dependent job-window dimensions (K, J) keeps one
+    bursty lane from forcing a fresh XLA trace for every grid it touches.
+    """
+    return 1 << (n - 1).bit_length() if n > 0 else 0
+
+
 @dataclass
 class PackedGrid:
     """A spec grid packed into dense per-lane arrays for ``repro.sim.batched``.
@@ -285,7 +295,8 @@ def _require_uniform(name: str, values: Sequence[Any]) -> Any:
     return values[0]
 
 
-def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
+def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0,
+               bucket: bool = True) -> PackedGrid:
     """Pack a spec grid into the dense arrays the batched backend consumes.
 
     Every lane must share ``days`` and ``n_files`` (they set the shared tick
@@ -295,6 +306,20 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
     workload-differing specs get distinct dynamics lanes; only pricing-only
     variants share one). ``curves`` is not supported (time-series live on
     the event engine).
+
+    Catalogue and job-stream sampling is memoized per (base, seed,
+    n_files, rate, workload) draw key: lanes that differ only in capacity
+    limits (``cache_tb``/``gcs_limit_tb``) replicate the reference
+    engine's RNG stream *identically*, so the host draw runs once and the
+    arrays are shared.
+
+    ``bucket=True`` (default) rounds the data-dependent job-window shapes
+    — K (``max_jobs_per_tick``) and J (padded jobs/site) — up to powers of
+    two. Padding slots carry ``job_submit_tick == T`` (never reached), so
+    the simulated per-lane state is bitwise unchanged (the two f32
+    aggregates summed over the J axis move by reduction-order ulp only)
+    while the batched backend's compile cache stops retracing per
+    data-dependent shape (``tests/test_batched.py`` pins the claim).
     """
     specs = list(specs)
     if not specs:
@@ -324,11 +349,13 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
     lane_index: Dict[ScenarioSpec, int] = {}
     lane_of = np.zeros(len(specs), dtype=np.int32)
     cfgs = []
+    lane_specs: List[ScenarioSpec] = []
     for i, spec in enumerate(specs):
         key = replace(spec, egress="internet", storage_price=None)
         if key not in lane_index:
             lane_index[key] = len(cfgs)
             cfgs.append(all_cfgs[i])
+            lane_specs.append(key)
         lane_of[i] = lane_index[key]
 
     L = len(cfgs)
@@ -360,18 +387,22 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
     per_lane_jobs = []  # (fid, submit_tick, submit_time, tail) per site
     rate_mults = []  # [G] per lane: compiled workload arrival schedule
 
-    for li, cfg in enumerate(cfgs):
+    def _draw_lane(cfg):
+        """Host-side RNG work for one dynamics lane: catalogue (sizes,
+        popularity) and the pre-sampled job stream. Replicates the event
+        engine's draw order; memoized below because lanes differing only
+        in capacity limits consume an identical stream."""
         rng = np.random.default_rng(cfg.seed)
         size_dist = BoundedExponential(cfg.size_lam, cfg.size_lo, cfg.size_hi,
                                        unit=GiB)
+        l_sizes = np.zeros((S, F), dtype=np.float32)
+        l_pop = np.zeros((S, F), dtype=np.float32)
         cum_ws = []
-        for si, site in enumerate(cfg.sites):
+        for si in range(S):
             # Same draw order as ``hcdc._SiteState``: sizes, then popularity.
-            sizes[li, si] = size_dist.sample(rng, F)
-            pop[li, si] = cfg.popularity.sample_popularity(rng, F)
-            cum_ws.append(cfg.popularity.selection_cdf(pop[li, si]))
-            disk_limit[li, si] = (np.inf if site.disk_limit is None
-                                  else site.disk_limit)
+            l_sizes[si] = size_dist.sample(rng, F)
+            l_pop[si] = cfg.popularity.sample_popularity(rng, F)
+            cum_ws.append(cfg.popularity.selection_cdf(l_pop[si]))
         # Same draw as ``HCDCScenario.__init__``: the pre-sampled job
         # stream, modulated by the (deterministic, RNG-free) workload
         # schedule exactly as the event engine modulates its own stream.
@@ -380,7 +411,6 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
             rng, (S, n_gen))
         sched = cfg.workload.compile(n_gen, cfg.gen_interval)
         counts = counts * sched.rate_mult
-        rate_mults.append(sched.rate_mult.astype(np.float32))
         gen_times = np.arange(n_gen, dtype=np.float64) * cfg.gen_interval
         dur_dist = BoundedExponential(cfg.dur_lam, lo=cfg.dur_lo)
         lane_jobs = []
@@ -402,16 +432,32 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
                                                     emitted)]
                 fid = np.zeros(len(u), dtype=np.int32)
                 for p in np.unique(j_power):
-                    cdf = cfg.popularity.selection_cdf(pop[li, si],
+                    cdf = cfg.popularity.selection_cdf(l_pop[si],
                                                       power=float(p))
                     sel = j_power == p
                     fid[sel] = np.searchsorted(cdf, u[sel], side="right")
-            dl = sizes[li, si, fid].astype(np.float64) / cfg.download
+            dl = l_sizes[si, fid].astype(np.float64) / cfg.download
             tail = np.maximum(1, (dl + durs).astype(np.int64))
             j_tick = np.searchsorted(grid, j_times, side="left").astype(np.int32)
             lane_jobs.append((fid, j_tick, j_times.astype(np.float32),
                               tail.astype(np.float32)))
+        return l_sizes, l_pop, lane_jobs, sched.rate_mult.astype(np.float32)
+
+    draw_cache: Dict[ScenarioSpec, tuple] = {}
+    for li, cfg in enumerate(cfgs):
+        # Capacity limits never touch the RNG stream: lanes that differ
+        # only in cache_tb/gcs_limit_tb share one host-side draw.
+        draw_key = replace(lane_specs[li], cache_tb=None, gcs_limit_tb=None)
+        if draw_key not in draw_cache:
+            draw_cache[draw_key] = _draw_lane(cfg)
+        l_sizes, l_pop, lane_jobs, rate_mult = draw_cache[draw_key]
+        sizes[li] = l_sizes
+        pop[li] = l_pop
         per_lane_jobs.append(lane_jobs)
+        rate_mults.append(rate_mult)
+        for si, site in enumerate(cfg.sites):
+            disk_limit[li, si] = (np.inf if site.disk_limit is None
+                                  else site.disk_limit)
 
         gcs_enabled[li] = cfg.gcs_enabled
         gcs_limit[li] = np.inf if cfg.gcs_limit is None else cfg.gcs_limit
@@ -424,6 +470,8 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
         tables.append(LinkTickTable.from_values(rates, slots, lats))
 
     J = max(len(j[0]) for lane in per_lane_jobs for j in lane)
+    if bucket:
+        J = _pow2_bucket(J)
     job_fid = np.zeros((L, S, J), dtype=np.int32)
     job_submit_tick = np.full((L, S, J), T, dtype=np.int32)
     job_submit_time = np.zeros((L, S, J), dtype=np.float32)
@@ -440,6 +488,10 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0) -> PackedGrid:
             job_tail[li, si, :n] = tail
             jobs_per_tick[li, :, si] = np.bincount(j_tick, minlength=T)
     max_jobs_per_tick = int(jobs_per_tick.max()) if jobs_per_tick.size else 0
+    if bucket:
+        # Extra window slots read padded/later-tick entries, which the
+        # kernel's validity mask rejects — bitwise no-op, stable trace.
+        max_jobs_per_tick = _pow2_bucket(max_jobs_per_tick)
 
     return PackedGrid(
         specs=specs,

@@ -5,13 +5,31 @@ per Python interpreter; the §5.3 decision workflow wants *grids* of
 scenarios. This module runs an entire packed grid as **one** ``jit`` +
 ``vmap`` JAX program: lane ``l`` is one ``ScenarioSpec``, every lane steps
 a shared fixed-tick clock, and per-lane transfer/link state advances
-through the ``repro.kernels.carousel_update`` tick math (Pallas on TPU,
-the jnp reference elsewhere). The paper's billing quantities — GCS
+through the ``repro.kernels.carousel_update`` tick math (the Pallas
+kernel on TPU; a scatter-free one-hot formulation of the same math on
+CPU). The paper's billing quantities — GCS
 byte-seconds, tiered egress volume, class A/B operation counts — are
 accumulated on device per 30-day month bucket and folded into the
 existing ``GCSCostModel`` / ``MonthlyBill`` machinery on the way out, so
 ``backend="jax"`` returns the same ``SweepResult`` shape as the process
 backend.
+
+The tick program is **site-vectorized**: every per-site quantity lives in
+an ``[S, ...]`` array and the per-tick candidate windows (this tick's job
+arrivals, the waiting-queue heads) run as K/W-step prefix recurrences over
+``[S, K]``/``[S, W]`` vectors, so the traced program size is O(K+W) —
+independent of the site count — and shared-capacity admission (the GCS
+cold tier) is a prefix-sum gate over the site-major flattened candidate
+array. Consumer counts are maintained *incrementally* (O(S·K) scatters at
+submission plus O(S·F) elementwise updates at file arrival) instead of a
+per-tick O(S·J) segment-sum over the whole job table.
+
+Large grids execute in bounded device memory through **lane chunking**
+(``run_sweep(..., lane_chunk=)``): lanes are split into fixed-size chunks
+(the last chunk padded by replication), every chunk reuses one compiled
+program, and chunks round-robin across devices when more than one is
+visible. ``pack_specs`` rounds the K/J job-window shapes up to power-of-
+two buckets so data-dependent shapes stop forcing recompiles.
 
 Workloads (``repro.sim.workload``): a spec's access-pattern model
 compiles to a deterministic per-generator-tick rate/popularity schedule
@@ -48,7 +66,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.carousel_update.carousel_update import carousel_tick_pallas
-from repro.kernels.carousel_update.ref import carousel_tick_ref
 from repro.sim.cloud import bills_from_monthly_totals
 from repro.sim.sweep import ScenarioResult, SweepResult
 
@@ -64,7 +81,21 @@ ABSENT, IN_FLIGHT, PRESENT = 0, 1, 2
 #: it — a burst simply drains over the next few ticks.
 WAIT_ADMITS_PER_TICK = 4
 
+#: Refinement passes of the shared-GCS admission gate. The reference
+#: engine's greedy scan admits every *individually* fitting candidate (a
+#: too-big file is skipped, not head-blocking); each prefix-sum pass over
+#: the site-major flattened candidate vector admits the next fitting run
+#: past a blocker. The passes are shared across sites (the per-site
+#: unrolled predecessor gave each site its own three), so a tick with
+#: many oversized blockers can under-admit a later site — bounded and
+#: self-healing: capacity is never exceeded, and a starved candidate is
+#: recomputed as a candidate next tick with fresh passes (a >= 1-tick
+#: migration delay in a pathological tick, inside the statistical
+#: fidelity contract).
+GCS_ADMIT_PASSES = 3
+
 _INF = jnp.float32(jnp.inf)
+_NEG_INF = jnp.float32(-jnp.inf)
 _BIG_TICKET = jnp.int32(2 ** 30)
 
 
@@ -74,12 +105,27 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
 
     Vectorization notes: the per-tick candidate sets (this tick's job
     arrivals, the waiting-queue window) are tiny, so their sequential
-    semantics — later candidates see earlier reservations — are computed as
-    unrolled scalar recurrences over K/W-vectors, and the results land in
-    the big ``[S, F]`` state arrays through *one* scatter per array.
-    Scatters use duplicate-safe combinators (``add`` of deltas, ``max``/
-    ``min`` for flags) because the same file id can appear several times in
-    a candidate window.
+    semantics — later candidates see earlier reservations — are computed
+    as K/W-step prefix recurrences over ``[S, K]``/``[S, W]`` vectors (all
+    sites advance together; the traced program is O(K+W), not O(S·(K+W))),
+    and the results land in the big ``[S, F]`` state arrays through *one*
+    scatter per array. Scatters use duplicate-safe combinators (``add`` of
+    deltas, ``max``/``min`` for flags) because the same file id can appear
+    several times in a candidate window.
+
+    Consumer counts (jobs holding a file on the hot tier) are incremental:
+
+    - ``pend_cnt``/``pend_tail`` [S,F]: count and max run-tail of jobs
+      submitted whose input file is not yet on disk (+1/+max scatters over
+      the K-window at submission; zeroed elementwise when the file
+      arrives);
+    - ``fin_max`` [S,F]: max analytic finish time (``ready + tail``) over
+      jobs whose input is on disk (max-scatter at submission onto present
+      files; elementwise ``now + pend_tail`` fold when a file arrives).
+
+    A file has no consumers iff ``pend_cnt == 0`` and ``fin_max <= now`` —
+    exactly the condition the previous per-tick segment-sum over the whole
+    [S, J] job table computed, at a fraction of the cost.
     """
 
     def tick_fn(state, xs, const):
@@ -88,33 +134,44 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
          gcs_enabled, gcs_limit, min_pop, bw, slots, latency, mode) = const
         F = sizes.shape[1]
         J = job_fid.shape[1]
-        M = bw.shape[0]
         st = dict(state)
         site_rows = jnp.arange(S, dtype=jnp.int32)
 
-        # -- consumer counts (jobs submitted strictly before this tick that
-        # have not finished by ``now``; deletions run before submissions in
-        # the reference generator, so this tick's arrivals are excluded).
-        submitted = job_submit_tick < t
-        finished = (st["job_ready"] < _INF) & \
-            (st["job_ready"] + job_tail <= now)
-        active_job = submitted & ~finished
-        flat_fid = (job_fid + site_rows[:, None] * F)
-        consumers = jax.ops.segment_sum(
-            active_job.reshape(-1).astype(jnp.int32),
-            flat_fid.reshape(-1), num_segments=S * F).reshape(S, F)
+        # -- consumer snapshot (jobs submitted strictly before this tick
+        # that have not finished by ``now``; deletions run before
+        # submissions in the reference generator, so this tick's arrivals
+        # are excluded — their scatters land at the end of the tick).
+        no_cons = (st["pend_cnt"] == 0) & (st["fin_max"] <= now)
 
-        # -- advance transfers one tick (the carousel hot-loop kernel) ----
+        # -- advance transfers one tick (the carousel tick math; Pallas
+        # kernel on TPU). A file only ever transfers on its own site's
+        # three links (link id = 3*site + type), so the CPU path computes
+        # the per-link active counts as a one-hot reduction over the
+        # link-type axis — integer-valued f32 sums, bitwise identical to
+        # the kernel's segment-sum, but with no scatter (XLA:CPU expands
+        # scatters into O(S·F)-trip sequential loops that dominated the
+        # tick before this formulation).
         now_prev = now - dt
         t_active = st["tr_slot"] & (st["tr_start"] <= now_prev + 0.5)
-        tick = carousel_tick_pallas if use_pallas else carousel_tick_ref
-        new_done, completed, _ = tick(
-            st["tr_link"].reshape(-1), t_active.reshape(-1),
-            st["tr_done"].reshape(-1), st["tr_total"].reshape(-1),
-            bw, mode, dt)
-        comp = completed.reshape(S, F)
-        new_done = new_done.reshape(S, F)
         ltype = st["tr_link"] % 3  # 0 tape->disk, 1 gcs->disk, 2 disk->gcs
+        loc_onehot = ltype[:, :, None] == jnp.arange(3, dtype=jnp.int32)
+        if use_pallas:
+            new_done, completed, _ = carousel_tick_pallas(
+                st["tr_link"].reshape(-1), t_active.reshape(-1),
+                st["tr_done"].reshape(-1), st["tr_total"].reshape(-1),
+                bw, mode, dt)
+            comp = completed.reshape(S, F)
+            new_done = new_done.reshape(S, F)
+        else:
+            act_f = t_active.astype(jnp.float32)
+            counts = jnp.sum(act_f[:, :, None] * loc_onehot,
+                             axis=1).reshape(-1)  # [M], M = 3*S
+            bw_i = bw[st["tr_link"]]
+            shared = bw_i / jnp.maximum(counts[st["tr_link"]], 1.0)
+            rate = jnp.where(mode[st["tr_link"]] > 0, bw_i, shared)
+            new_done = jnp.minimum(st["tr_total"],
+                                   st["tr_done"] + act_f * rate * dt)
+            comp = (new_done >= st["tr_total"]) & t_active
         comp_tape = comp & (ltype == 0)
         comp_recall = comp & (ltype == 1)
         comp_mig = comp & (ltype == 2)
@@ -132,7 +189,7 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         st["cls_a_mo"] = st["cls_a_mo"].at[month].add(
             jnp.sum(comp_mig).astype(jnp.float32))
         # migrated with no remaining consumer: drop the hot copy now
-        drop_hot = comp_mig & (consumers == 0) & (st["disk_state"] == PRESENT)
+        drop_hot = comp_mig & no_cons & (st["disk_state"] == PRESENT)
         st["disk_used"] -= jnp.sum(sizes * drop_hot, axis=1)
         st["disk_state"] = jnp.where(drop_hot, ABSENT, st["disk_state"])
         st["tr_slot"] = st["tr_slot"] & ~comp
@@ -140,9 +197,22 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         st["tr_total"] = jnp.where(comp, _INF, st["tr_total"])
         st["tr_start"] = jnp.where(comp, _INF, st["tr_start"])
 
-        # -- link-slot FIFO admission (tickets are contiguous per link) ---
-        occ = jnp.zeros((M,), jnp.float32).at[st["tr_link"].reshape(-1)].add(
-            st["tr_slot"].reshape(-1).astype(jnp.float32))
+        # arrived files resolve their pending jobs (ready is assigned in
+        # the pending step below with the same ``now``): the pending count
+        # folds into the analytic finish horizon.
+        resolve = inbound & (st["pend_cnt"] > 0)
+        st["fin_max"] = jnp.where(
+            resolve, jnp.maximum(st["fin_max"], now + st["pend_tail"]),
+            st["fin_max"])
+        st["pend_cnt"] = jnp.where(inbound, 0, st["pend_cnt"])
+        st["pend_tail"] = jnp.where(inbound, 0.0, st["pend_tail"])
+
+        # -- link-slot FIFO admission (tickets are contiguous per link).
+        # Link-indexed counters live as [S, 3] matrices (site x link type)
+        # so every update is a static column slice, never a scatter.
+        occ3 = jnp.sum(st["tr_slot"].astype(jnp.float32)[:, :, None]
+                       * loc_onehot, axis=1)  # [S, 3] active-slot counts
+        occ = occ3.reshape(-1)
         free = jnp.maximum(slots - occ, 0.0)
         n_q = (st["lq_next"] - st["lq_serve"]).astype(jnp.float32)
         admit = jnp.minimum(free, n_q).astype(jnp.int32)
@@ -154,34 +224,36 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
                                    st["tr_start"])
         st["lq_queued"] = st["lq_queued"] & ~adm_row
         st["lq_serve"] = new_serve
-        occ = occ + admit.astype(jnp.float32)
+        occ3 = (occ + admit.astype(jnp.float32)).reshape(S, 3)
+        lqn3 = st["lq_next"].reshape(S, 3)   # working [S, 3] views; the
+        lqs3 = st["lq_serve"].reshape(S, 3)  # flat [M] state is written
+        slots3 = slots.reshape(S, 3)         # back after the windows
+        lat3 = latency.reshape(S, 3)
 
         # -- hot-tier deletions + hot->cold migrations --------------------
         limited = jnp.isfinite(disk_limit)[:, None]
-        cand = (consumers == 0) & (st["disk_state"] == PRESENT) & limited
+        cand = no_cons & (st["disk_state"] == PRESENT) & limited
         gs = st["gcs_state"]
         migratable = gcs_enabled & (gs == ABSENT) & (pop >= min_pop)
         delete = cand & (~gcs_enabled | (gs == PRESENT)
                          | ((gs == ABSENT) & ~(pop >= min_pop)))
         want_mig = cand & migratable
-        # shared GCS capacity is consumed site-sequentially (only the
-        # scalar offset is sequential; the mask algebra stays vectorized).
-        # The reference admits every *individually* fitting file (a too-big
-        # candidate is skipped, not head-blocking): a cumulative-prefix
-        # gate refined over a few passes approximates that greedy scan —
-        # each pass admits the next fitting run past a blocker.
-        migs = []
+        # Shared GCS capacity: a prefix-sum admission gate over the
+        # site-major flattened candidate vector (one cumsum covers every
+        # site; earlier candidates' admissions are visible to later ones),
+        # refined over a few passes so a too-big blocker does not head-
+        # block the fitting candidates behind it.
+        want_flat = want_mig.reshape(-1)
+        sizes_flat = sizes.reshape(-1)
+        admitted_flat = jnp.zeros((S * F,), bool)
         gcs_used = st["gcs_used"]
-        for s in range(S):
-            admitted = jnp.zeros((F,), bool)
-            for _ in range(3):
-                rem = want_mig[s] & ~admitted
-                csum = jnp.cumsum(sizes[s] * rem)
-                new = rem & (gcs_used + csum <= gcs_limit)
-                gcs_used = gcs_used + jnp.sum(sizes[s] * new)
-                admitted = admitted | new
-            migs.append(admitted)
-        mig = jnp.stack(migs)
+        for _ in range(GCS_ADMIT_PASSES):
+            rem = want_flat & ~admitted_flat
+            csum = jnp.cumsum(sizes_flat * rem)
+            new = rem & (gcs_used + csum <= gcs_limit)
+            gcs_used = gcs_used + jnp.sum(sizes_flat * new)
+            admitted_flat = admitted_flat | new
+        mig = admitted_flat.reshape(S, F)
         st["gcs_used"] = gcs_used
         st["gcs_state"] = jnp.where(mig, IN_FLIGHT, gs)
         st["disk_used"] -= jnp.sum(sizes * delete, axis=1)
@@ -190,8 +262,8 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         # slots only while the link queue is empty, overflow queues)
         mlink = 3 * site_rows + 2  # [S]
         rank = jnp.cumsum(mig.astype(jnp.float32), axis=1) - 1.0
-        q_empty = (st["lq_next"][mlink] == st["lq_serve"][mlink])[:, None]
-        free_m = jnp.maximum(slots[mlink] - occ[mlink], 0.0)[:, None]
+        q_empty = (lqn3[:, 2] == lqs3[:, 2])[:, None]
+        free_m = jnp.maximum(slots3[:, 2] - occ3[:, 2], 0.0)[:, None]
         direct = mig & q_empty & (rank < free_m)
         queued = mig & ~direct
         qrank = jnp.cumsum(queued.astype(jnp.int32), axis=1) - 1
@@ -201,92 +273,116 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         st["tr_done"] = jnp.where(mig, 0.0, st["tr_done"])
         st["tr_start"] = jnp.where(direct, now, st["tr_start"])
         st["lq_ticket"] = jnp.where(
-            queued, st["lq_next"][mlink][:, None] + qrank, st["lq_ticket"])
+            queued, lqn3[:, 2][:, None] + qrank, st["lq_ticket"])
         st["lq_queued"] = st["lq_queued"] | queued
-        st["lq_next"] = st["lq_next"].at[mlink].add(
+        lqn3 = lqn3.at[:, 2].add(
             jnp.sum(queued, axis=1).astype(jnp.int32))
-        occ = occ.at[mlink].add(jnp.sum(direct, axis=1).astype(jnp.float32))
+        occ3 = occ3.at[:, 2].add(jnp.sum(direct, axis=1).astype(jnp.float32))
 
         # =================================================================
-        # Candidate-window planning. This tick's job arrivals (K per site)
-        # and the waiting-queue heads (W per site) are tiny windows; their
-        # sequential semantics — later candidates see earlier reservations
-        # — run as scalar prefix recurrences on gathered vectors, and every
-        # resulting state change is DEFERRED and applied below as a single
-        # duplicate-safe scatter per array (scatter passes over the big
-        # [S, F] state dominate the tick cost).
+        # Candidate-window planning, site-batched. This tick's job arrivals
+        # (K per site) and the waiting-queue heads (W per site) are tiny
+        # windows; their sequential semantics — later candidates see
+        # earlier reservations — run as K/W-step prefix recurrences over
+        # [S, K]/[S, W] vectors, and every resulting state change is
+        # DEFERRED and applied below as a single duplicate-safe scatter
+        # per array.
         # =================================================================
         W = WAIT_ADMITS_PER_TICK
-        plans = []  # per group: dict of planned per-candidate vectors
+        plans = []  # per group: dict of planned per-candidate [S, C] vecs
 
-        def plan_links(s, fids, fire, occ):
-            """Assign link slots / FIFO queue tickets to fired candidates.
+        def plan_links(fids, fire, occ3):
+            """Assign link slots / FIFO queue tickets to fired candidates
+            (``fids``/``fire`` are [S, C]; candidate windows only touch
+            their own site's tape->disk / gcs->disk links, so all sites
+            plan in parallel).
 
-            Mutates only the small [M] occupancy/ticket counters; returns
-            the per-candidate plan (direct slot, queue ticket, start time).
+            Mutates only the small [S, 3] occupancy/ticket counters;
+            returns the per-candidate plan (direct slot, queue ticket,
+            start time).
             """
-            from_gcs = gcs_enabled & (st["gcs_state"][s, fids] == PRESENT)
+            from_gcs = gcs_enabled & (
+                jnp.take_along_axis(st["gcs_state"], fids, axis=1)
+                == PRESENT)
             link_local = jnp.where(from_gcs, 1, 0)
             direct = jnp.zeros_like(fire)
             queued = jnp.zeros_like(fire)
             tstart = jnp.full(fire.shape, jnp.inf, jnp.float32)
             lq_val = jnp.zeros(fire.shape, jnp.int32)
+            nonlocal lqn3
             for loc in (0, 1):  # tape->disk, gcs->disk
-                m = 3 * s + loc
                 mask = fire & (link_local == loc)
-                q_empty = st["lq_next"][m] == st["lq_serve"][m]
-                free_m = jnp.maximum(slots[m] - occ[m], 0.0)
-                rk = jnp.cumsum(mask.astype(jnp.float32)) - 1.0
+                q_empty = (lqn3[:, loc] == lqs3[:, loc])[:, None]
+                free_m = jnp.maximum(slots3[:, loc] - occ3[:, loc],
+                                     0.0)[:, None]
+                rk = jnp.cumsum(mask.astype(jnp.float32), axis=1) - 1.0
                 d = mask & q_empty & (rk < free_m)
                 qd = mask & ~d
-                qrk = jnp.cumsum(qd.astype(jnp.int32)) - 1
+                qrk = jnp.cumsum(qd.astype(jnp.int32), axis=1) - 1
                 direct = direct | d
                 queued = queued | qd
-                tstart = jnp.where(d, now + latency[m], tstart)
-                lq_val = jnp.where(qd, st["lq_next"][m] + qrk, lq_val)
-                st["lq_next"] = st["lq_next"].at[m].add(
-                    jnp.sum(qd).astype(jnp.int32))
-                occ = occ.at[m].add(jnp.sum(d).astype(jnp.float32))
-            return occ, dict(rows=s * F + fids, fire=fire,
-                             m_vec=3 * s + link_local, direct=direct,
-                             queued=queued, tstart=tstart, lq_val=lq_val)
+                tstart = jnp.where(d, now + lat3[:, loc][:, None], tstart)
+                lq_val = jnp.where(qd, lqn3[:, loc][:, None] + qrk,
+                                   lq_val)
+                lqn3 = lqn3.at[:, loc].add(
+                    jnp.sum(qd, axis=1).astype(jnp.int32))
+                occ3 = occ3.at[:, loc].add(
+                    jnp.sum(d, axis=1).astype(jnp.float32))
+            rows = site_rows[:, None] * F + fids
+            return occ3, dict(rows=rows, fire=fire,
+                             m_vec=3 * site_rows[:, None] + link_local,
+                             direct=direct, queued=queued, tstart=tstart,
+                             lq_val=lq_val)
 
         # -- group 1: job submissions for this tick (only the first arrival
         # of a file starts its transfer; later same-tick jobs attach) -----
+        started = jnp.zeros((S, 0), bool)
+        g1_fids = jnp.zeros((S, 0), jnp.int32)
         if K > 0:
             ks = jnp.arange(K, dtype=jnp.int32)
-            for s in range(S):
-                jid = jnp.minimum(st["ptr"][s] + ks, J - 1)
-                valid = (st["ptr"][s] + ks < J) & \
-                    (job_submit_tick[s, jid] == t)
-                fids = job_fid[s, jid]
-                same = (fids[None, :] == fids[:, None]) & valid[None, :] \
-                    & (ks[None, :] < ks[:, None])
-                first = valid & ~jnp.any(same, axis=1)
-                size = sizes[s, fids]
-                ds = st["disk_state"][s, fids]
-                ww = st["wq_wait"][s, fids]
-                absent = first & (ds == ABSENT)
-                started_list = []
-                extra = jnp.float32(0.0)
-                for k in range(K):  # scalar prefix recurrence, K is tiny
-                    fit = st["disk_used"][s] + extra + size[k] \
-                        <= disk_limit[s]
-                    st_k = absent[k] & fit
-                    started_list.append(st_k)
-                    extra = extra + jnp.where(st_k, size[k], 0.0)
-                started = jnp.stack(started_list)
-                st["disk_used"] = st["disk_used"].at[s].add(extra)
-                to_wait = absent & ~started & ~ww
-                wrank = jnp.cumsum(to_wait.astype(jnp.int32)) - 1
-                occ, plan = plan_links(s, fids, started, occ)
-                plan["to_wait"] = to_wait
-                plan["wq_val"] = jnp.where(to_wait,
-                                           st["wq_next"][s] + wrank, 0)
-                st["wq_next"] = st["wq_next"].at[s].add(
-                    jnp.sum(to_wait).astype(jnp.int32))
-                plan["stale"] = jnp.zeros_like(started)
-                plans.append(plan)
+            jpos = st["ptr"][:, None] + ks[None, :]  # [S, K]
+            jid = jnp.minimum(jpos, J - 1)
+            valid = (jpos < J) & \
+                (jnp.take_along_axis(job_submit_tick, jid, axis=1) == t)
+            fids = jnp.take_along_axis(job_fid, jid, axis=1)
+            g1_fids = fids
+            # same[s, k, j]: an earlier valid window slot j < k carries the
+            # same file — slot k attaches instead of starting a transfer.
+            same = (fids[:, None, :] == fids[:, :, None]) \
+                & valid[:, None, :] & (ks[None, None, :] < ks[None, :, None])
+            first = valid & ~jnp.any(same, axis=2)
+            size = jnp.take_along_axis(sizes, fids, axis=1)
+            ds = jnp.take_along_axis(st["disk_state"], fids, axis=1)
+            ww = jnp.take_along_axis(st["wq_wait"], fids, axis=1)
+            tailw = jnp.take_along_axis(job_tail, jid, axis=1)
+            absent = first & (ds == ABSENT)
+            started_cols = []
+            extra = jnp.zeros((S,), jnp.float32)
+            for k in range(K):  # prefix recurrence over the window; all
+                fit = st["disk_used"] + extra + size[:, k] \
+                    <= disk_limit       # sites advance together
+                st_k = absent[:, k] & fit
+                started_cols.append(st_k)
+                extra = extra + jnp.where(st_k, size[:, k], 0.0)
+            started = jnp.stack(started_cols, axis=1)  # [S, K]
+            st["disk_used"] = st["disk_used"] + extra
+            to_wait = absent & ~started & ~ww
+            wrank = jnp.cumsum(to_wait.astype(jnp.int32), axis=1) - 1
+            occ3, plan = plan_links(fids, started, occ3)
+            plan["to_wait"] = to_wait
+            plan["wq_val"] = jnp.where(to_wait,
+                                       st["wq_next"][:, None] + wrank, 0)
+            st["wq_next"] = st["wq_next"] + \
+                jnp.sum(to_wait, axis=1).astype(jnp.int32)
+            plan["stale"] = jnp.zeros_like(started)
+            # incremental consumer deltas: window jobs whose file is on
+            # disk are ready this tick (analytic finish now + tail); the
+            # rest join the pending pool on their file.
+            ready_now = valid & (ds == PRESENT)
+            plan["pend_add"] = valid & ~ready_now
+            plan["fin_val"] = jnp.where(ready_now, now + tailw, _NEG_INF)
+            plan["tail"] = tailw
+            plans.append(plan)
         st["ptr"] = st["ptr"] + jobs_now
 
         # -- group 2: waiting-queue admission — strict FIFO on the disk
@@ -295,37 +391,34 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         # (queue-jump) are excluded by fid comparison; entries enqueued
         # above are not yet visible (they join next tick, matching a tail
         # position in the FIFO).
-        sub_started = [jnp.where(p["fire"], p["rows"], -1) for p in plans]
-        for s in range(S):
-            tickets = jnp.where(st["wq_wait"][s], st["wq_ticket"][s],
-                                _BIG_TICKET)
-            neg, idx = jax.lax.top_k(-tickets, W)  # W lowest tickets
-            validw = (neg > -_BIG_TICKET)
-            rows = s * F + idx
-            jumped = jnp.zeros(idx.shape, bool)
-            for started_rows in sub_started:
-                jumped = jumped | jnp.any(
-                    rows[:, None] == started_rows[None, :], axis=1)
-            ds = st["disk_state"][s, idx]
-            stale = validw & ((ds != ABSENT) | jumped)
-            size = sizes[s, idx]
-            adm_list = []
-            extra = jnp.float32(0.0)
-            blocked = jnp.asarray(False)
-            for k in range(W):
-                fit = st["disk_used"][s] + extra + size[k] <= disk_limit[s]
-                live = validw[k] & ~stale[k]
-                adm = live & fit & ~blocked
-                blocked = blocked | (live & ~fit)
-                adm_list.append(adm)
-                extra = extra + jnp.where(adm, size[k], 0.0)
-            admitted = jnp.stack(adm_list)
-            st["disk_used"] = st["disk_used"].at[s].add(extra)
-            occ, plan = plan_links(s, idx, admitted, occ)
-            plan["to_wait"] = jnp.zeros_like(admitted)
-            plan["wq_val"] = jnp.zeros(idx.shape, jnp.int32)
-            plan["stale"] = stale
-            plans.append(plan)
+        tickets = jnp.where(st["wq_wait"], st["wq_ticket"], _BIG_TICKET)
+        neg, idx = jax.lax.top_k(-tickets, W)  # [S, W] lowest tickets
+        validw = neg > -_BIG_TICKET
+        jumped = jnp.zeros(idx.shape, bool)
+        if K > 0:
+            started_fid = jnp.where(started, g1_fids, -1)  # [S, K]
+            jumped = jnp.any(idx[:, :, None] == started_fid[:, None, :],
+                             axis=2)
+        ds = jnp.take_along_axis(st["disk_state"], idx, axis=1)
+        stale = validw & ((ds != ABSENT) | jumped)
+        size = jnp.take_along_axis(sizes, idx, axis=1)
+        adm_cols = []
+        extra = jnp.zeros((S,), jnp.float32)
+        blocked = jnp.zeros((S,), bool)
+        for k in range(W):  # FIFO prefix recurrence, all sites together
+            fit = st["disk_used"] + extra + size[:, k] <= disk_limit
+            live = validw[:, k] & ~stale[:, k]
+            adm = live & fit & ~blocked
+            blocked = blocked | (live & ~fit)
+            adm_cols.append(adm)
+            extra = extra + jnp.where(adm, size[:, k], 0.0)
+        admitted = jnp.stack(adm_cols, axis=1)  # [S, W]
+        st["disk_used"] = st["disk_used"] + extra
+        occ3, plan = plan_links(idx, admitted, occ3)
+        plan["stale"] = stale
+        plans.append(plan)
+
+        st["lq_next"] = lqn3.reshape(-1)
 
         # -- pending jobs whose input is on disk enter queued -> running;
         # completion is analytic (ready + download + duration). Planned
@@ -336,42 +429,64 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
                                       axis=1) == PRESENT
         st["job_ready"] = jnp.where(pending & on_disk, now, st["job_ready"])
 
-        # -- apply the planned windows: one scatter per state array -------
-        if plans:
-            rows = jnp.concatenate([p["rows"] for p in plans])
-            fire = jnp.concatenate([p["fire"] for p in plans])
-            to_wait = jnp.concatenate([p["to_wait"] for p in plans])
-            stale = jnp.concatenate([p["stale"] for p in plans])
-            wq_val = jnp.concatenate([p["wq_val"] for p in plans])
-            m_vec = jnp.concatenate([p["m_vec"] for p in plans])
-            direct = jnp.concatenate([p["direct"] for p in plans])
-            queued = jnp.concatenate([p["queued"] for p in plans])
-            tstart = jnp.concatenate([p["tstart"] for p in plans])
-            lq_val = jnp.concatenate([p["lq_val"] for p in plans])
-            size_c = sizes.reshape(-1)[rows]
+        # -- apply the planned windows: one scatter per state array.
+        # XLA:CPU expands each scatter into a sequential per-row loop, so
+        # rows are kept to the minimum: transfer/link plans scatter over
+        # both windows; the submission-only fields (wait-queue joins and
+        # the incremental consumer counters) exist only in the K-window
+        # and scatter over a third of the rows.
+        def cat(key):
+            return jnp.concatenate([p[key].reshape(-1) for p in plans])
 
-            def flat(name, update):
-                st[name] = update(st[name].reshape(-1)).reshape(S, F)
+        rows = cat("rows")
+        fire = cat("fire")
+        stale = cat("stale")
+        m_vec = cat("m_vec")
+        direct = cat("direct")
+        queued = cat("queued")
+        tstart = cat("tstart")
+        lq_val = cat("lq_val")
+        size_c = sizes.reshape(-1)[rows]
 
-            cur_link = st["tr_link"].reshape(-1)[rows]
-            cur_lqt = st["lq_ticket"].reshape(-1)[rows]
-            cur_wqt = st["wq_ticket"].reshape(-1)[rows]
-            flat("disk_state", lambda a: a.at[rows].add(
-                jnp.where(fire, IN_FLIGHT - ABSENT, 0)))
-            # started/stale entries leave the wait queue; new waiters join
-            flat("wq_wait", lambda a: a.at[rows].min(~(fire | stale)))
-            flat("wq_wait", lambda a: a.at[rows].max(to_wait))
-            flat("wq_ticket", lambda a: a.at[rows].add(
+        def flat(name, update):
+            st[name] = update(st[name].reshape(-1)).reshape(S, F)
+
+        cur_link = st["tr_link"].reshape(-1)[rows]
+        cur_lqt = st["lq_ticket"].reshape(-1)[rows]
+        flat("disk_state", lambda a: a.at[rows].add(
+            jnp.where(fire, IN_FLIGHT - ABSENT, 0)))
+        # started/stale entries leave the wait queue (new waiters join in
+        # the K-window block below, preserving the min-before-max order)
+        flat("wq_wait", lambda a: a.at[rows].min(~(fire | stale)))
+        flat("tr_link", lambda a: a.at[rows].add(
+            jnp.where(fire, m_vec - cur_link, 0)))
+        flat("tr_total", lambda a: a.at[rows].min(
+            jnp.where(fire, size_c, _INF)))
+        flat("tr_slot", lambda a: a.at[rows].max(direct))
+        flat("tr_start", lambda a: a.at[rows].min(tstart))
+        flat("lq_ticket", lambda a: a.at[rows].add(
+            jnp.where(queued, lq_val - cur_lqt, 0)))
+        flat("lq_queued", lambda a: a.at[rows].max(queued))
+
+        if K > 0:  # K-window-only scatters (wait-queue joins + consumers)
+            g1 = plans[0]
+            rows1 = g1["rows"].reshape(-1)
+            to_wait = g1["to_wait"].reshape(-1)
+            wq_val = g1["wq_val"].reshape(-1)
+            pend_add = g1["pend_add"].reshape(-1)
+            fin_val = g1["fin_val"].reshape(-1)
+            tail_c = g1["tail"].reshape(-1)
+            cur_wqt = st["wq_ticket"].reshape(-1)[rows1]
+            flat("wq_wait", lambda a: a.at[rows1].max(to_wait))
+            flat("wq_ticket", lambda a: a.at[rows1].add(
                 jnp.where(to_wait, wq_val - cur_wqt, 0)))
-            flat("tr_link", lambda a: a.at[rows].add(
-                jnp.where(fire, m_vec - cur_link, 0)))
-            flat("tr_total", lambda a: a.at[rows].min(
-                jnp.where(fire, size_c, _INF)))
-            flat("tr_slot", lambda a: a.at[rows].max(direct))
-            flat("tr_start", lambda a: a.at[rows].min(tstart))
-            flat("lq_ticket", lambda a: a.at[rows].add(
-                jnp.where(queued, lq_val - cur_lqt, 0)))
-            flat("lq_queued", lambda a: a.at[rows].max(queued))
+            # incremental consumer counters (visible from the next tick
+            # on, matching the reference's deletions-before-submissions)
+            flat("pend_cnt", lambda a: a.at[rows1].add(
+                jnp.where(pend_add, 1, 0)))
+            flat("pend_tail", lambda a: a.at[rows1].max(
+                jnp.where(pend_add, tail_c, 0.0)))
+            flat("fin_max", lambda a: a.at[rows1].max(fin_val))
 
         # -- integrate stored cloud volume (GB-seconds) per month ---------
         st["gbsec_mo"] = st["gbsec_mo"].at[month].add(
@@ -406,7 +521,9 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
 @functools.lru_cache(maxsize=16)
 def _grid_program(S: int, K: int, n_months: int, use_pallas: bool):
     """The jitted lane-vmapped simulation (cached per static shape family;
-    XLA additionally retraces per concrete array shape)."""
+    XLA additionally retraces per concrete array shape — ``pack_specs``'s
+    K/J power-of-two bucketing and ``lane_chunk`` keep those shapes
+    stable across grids)."""
     tick_fn, post_fn = _lane_step_fns(S, K, n_months, use_pallas)
 
     def lane_sim(times, dts, month_idx, t_idx, horizon,
@@ -437,6 +554,9 @@ def _grid_program(S: int, K: int, n_months: int, use_pallas: bool):
             wq_wait=jnp.zeros((S, F), bool),
             wq_ticket=jnp.zeros((S, F), jnp.int32),
             wq_next=jnp.zeros((S,), jnp.int32),
+            pend_cnt=jnp.zeros((S, F), jnp.int32),
+            pend_tail=jnp.zeros((S, F), jnp.float32),
+            fin_max=jnp.zeros((S, F), jnp.float32),
             job_ready=jnp.full((S, J), jnp.inf, jnp.float32),
             ptr=jnp.zeros((S,), jnp.int32),
             tape_b=jnp.zeros((S,), jnp.float32),
@@ -458,27 +578,72 @@ def _grid_program(S: int, K: int, n_months: int, use_pallas: bool):
     return jax.jit(jax.vmap(lane_sim, in_axes=lane_axes))
 
 
-def simulate_packed(grid: "PackedGrid", use_pallas: Optional[bool] = None):
+#: Per-lane array attributes of ``PackedGrid``, in ``lane_sim`` argument
+#: order (after the five shared tick-grid arguments).
+_LANE_FIELDS = ("disk_limit", "gcs_enabled", "gcs_limit", "min_migrate_pop",
+                "link_bw", "link_slots", "link_latency", "link_mode",
+                "sizes", "pop", "job_fid", "job_submit_tick",
+                "job_submit_time", "job_tail", "jobs_per_tick")
+
+
+def simulate_packed(grid: "PackedGrid", use_pallas: Optional[bool] = None,
+                    lane_chunk: Optional[int] = None,
+                    devices: Optional[Sequence] = None):
     """Run a packed grid on device; returns the raw per-lane aggregate dict
-    (numpy arrays, lane-leading)."""
+    (numpy arrays, lane-leading).
+
+    ``lane_chunk`` bounds device memory: lanes execute in fixed-size
+    chunks (the last chunk padded by replicating its final lane; padded
+    results are discarded), every chunk reusing one compiled program.
+    Per-lane results are bitwise identical to the unchunked path — lanes
+    never interact. ``devices`` (default: all local devices) receives the
+    chunks round-robin when more than one is present.
+    """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    if lane_chunk is not None and lane_chunk <= 0:
+        raise ValueError(f"lane_chunk must be > 0, got {lane_chunk!r}")
+    devices = list(devices) if devices is not None else jax.local_devices()
+    if not devices:
+        raise ValueError("devices must be a non-empty sequence")
+    L = grid.n_lanes
+    if lane_chunk is None and len(devices) > 1:
+        lane_chunk = -(-L // len(devices))  # spread one chunk per device
+
     program = _grid_program(len(grid.site_names), grid.max_jobs_per_tick,
                             grid.n_months, bool(use_pallas))
     T = grid.n_ticks
-    out = program(
-        jnp.asarray(grid.times), jnp.asarray(grid.dts),
-        jnp.asarray(grid.month_idx), jnp.arange(T, dtype=jnp.int32),
-        jnp.float32(grid.horizon),
-        jnp.asarray(grid.disk_limit), jnp.asarray(grid.gcs_enabled),
-        jnp.asarray(grid.gcs_limit), jnp.asarray(grid.min_migrate_pop),
-        jnp.asarray(grid.link_bw), jnp.asarray(grid.link_slots),
-        jnp.asarray(grid.link_latency), jnp.asarray(grid.link_mode),
-        jnp.asarray(grid.sizes), jnp.asarray(grid.pop),
-        jnp.asarray(grid.job_fid), jnp.asarray(grid.job_submit_tick),
-        jnp.asarray(grid.job_submit_time), jnp.asarray(grid.job_tail),
-        jnp.asarray(grid.jobs_per_tick))
-    return {k: np.asarray(v) for k, v in out.items()}
+    shared = (np.asarray(grid.times), np.asarray(grid.dts),
+              np.asarray(grid.month_idx), np.arange(T, dtype=np.int32),
+              np.float32(grid.horizon))
+    lanes = [np.asarray(getattr(grid, name)) for name in _LANE_FIELDS]
+
+    if lane_chunk is None or lane_chunk >= L:
+        out = program(*shared, *lanes)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    C = int(lane_chunk)
+    chunk_outs = []
+    for ci, start in enumerate(range(0, L, C)):
+        stop = min(start + C, L)
+        chunk = [a[start:stop] for a in lanes]
+        if stop - start < C:  # pad by replicating the last real lane
+            pad = C - (stop - start)
+            chunk = [np.concatenate([a] + [a[-1:]] * pad, axis=0)
+                     for a in chunk]
+        dev = devices[ci % len(devices)]
+        if len(devices) > 1:
+            # commit every argument so each chunk dispatches (and can
+            # execute concurrently) on its own device
+            args = [jax.device_put(a, dev)
+                    for a in (*shared, *chunk)]
+            chunk_outs.append(program(*args))
+        else:
+            chunk_outs.append(program(*shared, *chunk))
+    out = {k: np.concatenate([np.asarray(o[k]) for o in chunk_outs],
+                             axis=0)[:L]
+           for k in chunk_outs[0]}
+    return out
 
 
 def _lane_result(grid: "PackedGrid", out: dict, si: int,
@@ -524,7 +689,9 @@ def _lane_result(grid: "PackedGrid", out: dict, si: int,
 
 def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
                   progress: Optional[Callable] = None,
-                  use_pallas: Optional[bool] = None) -> SweepResult:
+                  use_pallas: Optional[bool] = None,
+                  lane_chunk: Optional[int] = None,
+                  devices: Optional[Sequence] = None) -> SweepResult:
     """Execute a spec grid as one batched on-device program.
 
     Returns a ``SweepResult`` interchangeable with the process backend's
@@ -532,12 +699,16 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
     per-config ``wall_s`` is the batch wall time split evenly). Specs that
     differ only in pricing (egress option, storage price) share one
     simulated dynamics lane and are billed separately.
+
+    ``lane_chunk``/``devices``: see ``simulate_packed`` — bounded-memory
+    chunked execution with optional multi-device round-robin.
     """
     from repro.core.scenarios import pack_specs
 
     t0 = time.perf_counter()
     grid = pack_specs(specs, tick=tick)
-    out = simulate_packed(grid, use_pallas=use_pallas)
+    out = simulate_packed(grid, use_pallas=use_pallas,
+                          lane_chunk=lane_chunk, devices=devices)
     wall = time.perf_counter() - t0
     results: List[ScenarioResult] = []
     for si in range(grid.n_specs):

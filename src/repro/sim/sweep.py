@@ -229,7 +229,8 @@ class SweepResult:
 def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
               progress: Optional[Callable[[int, int, ScenarioResult], None]]
               = None, backend: str = "process",
-              tick: float = 10.0) -> SweepResult:
+              tick: float = 10.0, lane_chunk: Optional[int] = None,
+              devices: Optional[Sequence[Any]] = None) -> SweepResult:
     """Execute every spec; results keep the input order.
 
     ``backend`` selects the execution engine:
@@ -245,11 +246,20 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
     ``workers``: process count for the process backend; ``None`` uses all
     CPUs (capped at the batch size), ``0``/``1`` runs serially in-process
     (useful under profilers and in tests of determinism).
+
+    ``lane_chunk``/``devices`` (jax backend only): execute the packed
+    grid's dynamics lanes in fixed-size chunks — bounded device memory
+    and one compile reused across chunks and grids — optionally round-
+    robined over several devices. Per-lane results are bitwise identical
+    to the unchunked path.
     """
     if backend == "jax":
         from repro.sim.batched import run_sweep_jax  # deferred: needs jax
 
-        return run_sweep_jax(specs, tick=tick, progress=progress)
+        return run_sweep_jax(specs, tick=tick, progress=progress,
+                             lane_chunk=lane_chunk, devices=devices)
+    if lane_chunk is not None or devices is not None:
+        raise ValueError("lane_chunk/devices apply to backend='jax' only")
     if backend != "process":
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'process' or 'jax')")

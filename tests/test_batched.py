@@ -19,6 +19,7 @@ from repro.core.scenarios import (
     pack_specs,
     with_seeds,
 )
+from repro.sim.batched import simulate_packed
 from repro.sim.sweep import run_sweep
 
 # Table 2 validation tolerance (fractional): the §4.2 bar for "the
@@ -123,6 +124,79 @@ def test_pack_specs_rejects_nonuniform_and_curves():
 def test_run_sweep_rejects_unknown_backend():
     with pytest.raises(ValueError, match="backend"):
         run_sweep([ScenarioSpec(**TINY)], backend="fortran")
+
+
+# ------------------------------------------- lane chunking & shape buckets
+def test_lane_chunked_bitwise_identical():
+    """Chunked execution (ISSUE 4) splits lanes into fixed-size padded
+    chunks; lanes never interact, so per-lane results must be *bitwise*
+    identical to the unchunked run — including the odd-size last chunk."""
+    specs = expand_grid({
+        "base": "III", "cache_tb": [10.0, 15.0, 20.0, 25.0, 30.0],
+        "seed": 7, **TINY,
+    })
+    whole = run_sweep(specs, backend="jax", tick=60.0)
+    chunked = run_sweep(specs, backend="jax", tick=60.0, lane_chunk=2)
+    for a, b in zip(whole.results, chunked.results):
+        assert a.spec == b.spec
+        assert a.metrics == b.metrics, a.spec.label
+        assert a.cost_usd == b.cost_usd
+
+
+def test_bucket_padding_bitwise_unchanged():
+    """Rounding K/J up to power-of-two buckets (compile-cache stability)
+    only adds window slots the validity mask rejects and job rows that
+    never submit — every raw per-lane aggregate stays bitwise equal."""
+    specs = expand_grid({"base": "III", "cache_tb": [15.0, 30.0], **TINY})
+    bucketed = pack_specs(specs, tick=60.0)
+    exact = pack_specs(specs, tick=60.0, bucket=False)
+    # the bench/test catalogue is non-degenerate: bucketing actually pads
+    assert bucketed.max_jobs_per_tick >= exact.max_jobs_per_tick
+    assert bucketed.job_fid.shape[2] >= exact.job_fid.shape[2]
+    assert bucketed.max_jobs_per_tick & (bucketed.max_jobs_per_tick - 1) == 0
+    assert bucketed.job_fid.shape[2] & (bucketed.job_fid.shape[2] - 1) == 0
+    out_b = simulate_packed(bucketed)
+    out_e = simulate_packed(exact)
+    assert set(out_b) == set(out_e)
+    for key in out_e:
+        if key in ("download_b", "wait_h_sum"):
+            # f32 sums over the padded J axis: identical addends (padding
+            # contributes exact zeros) but a different reduction-tree
+            # shape — equal to summation-order ulp, not bitwise.
+            np.testing.assert_allclose(out_b[key], out_e[key], rtol=1e-6,
+                                       err_msg=key)
+        else:
+            np.testing.assert_array_equal(out_b[key], out_e[key],
+                                          err_msg=key)
+
+
+def test_lane_chunk_knob_validation():
+    with pytest.raises(ValueError, match="lane_chunk"):
+        run_sweep([ScenarioSpec(**TINY)], backend="jax", lane_chunk=0)
+    with pytest.raises(ValueError, match="jax"):
+        run_sweep([ScenarioSpec(**TINY)], backend="process", lane_chunk=4)
+    with pytest.raises(ValueError, match="jax"):
+        run_sweep([ScenarioSpec(**TINY)], backend="process", devices=[])
+    with pytest.raises(ValueError, match="devices"):
+        run_sweep([ScenarioSpec(**TINY)], backend="jax", devices=[])
+
+
+def test_pack_specs_memoizes_catalogue_draws():
+    """Lanes differing only in capacity limits replicate the same RNG
+    stream, so the packed catalogue/job arrays must be identical (drawn
+    once, shared) while capacity arrays still differ per lane."""
+    specs = expand_grid({
+        "base": "III", "cache_tb": [10.0, 20.0], "gcs_limit_tb": [None, 5.0],
+        **TINY,
+    })
+    grid = pack_specs(specs)
+    assert grid.n_lanes == 4
+    for li in range(1, grid.n_lanes):
+        np.testing.assert_array_equal(grid.sizes[0], grid.sizes[li])
+        np.testing.assert_array_equal(grid.pop[0], grid.pop[li])
+        np.testing.assert_array_equal(grid.job_fid[0], grid.job_fid[li])
+        np.testing.assert_array_equal(grid.job_tail[0], grid.job_tail[li])
+    assert len({tuple(r) for r in grid.disk_limit[:, :1].tolist()}) == 2
 
 
 # ------------------------------------------------- reference cross-checks

@@ -28,6 +28,12 @@ relative to the stationary baseline — how much the access-stream *shape*
 (day/night cycles, reprocessing bursts, popularity drift) moves the
 paper's throughput observable at unchanged mean pricing knobs.
 
+Part 5 drives the decision layer (``repro.sim.decide``) end-to-end on the
+pricing grid: adaptive frontier refinement plus the displaced-disk and
+break-even solves. ``sweep.decide.lane_fraction`` tracks refinement lane
+efficiency vs an equivalent-resolution dense grid and
+``sweep.decide.displaced_tb`` the headline displaced-capacity figure.
+
 Spawned pool workers are pinned to ``JAX_PLATFORMS=cpu`` by
 ``run_sweep``'s worker initializer, so the process rows cannot hang
 probing accelerator devices while this process holds them.
@@ -37,11 +43,12 @@ from __future__ import annotations
 
 import argparse
 import os
-from dataclasses import replace
+import time
 from typing import Dict, List, Optional
 
-from repro.core.scenarios import ScenarioSpec, expand_grid, with_seeds
-from repro.sim.sweep import run_sweep
+from repro.core.scenarios import (ScenarioSpec, dynamics_key, expand_grid,
+                                  with_seeds)
+from repro.sim.sweep import SweepDriver, run_sweep
 
 #: Clock step (seconds) for the batched-backend throughput rows. Coarser
 #: than the 10 s generator interval: the per-tick fixed cost dominates
@@ -112,6 +119,43 @@ def _lane_scaling_rows(days: float, n_files: int,
     return rows
 
 
+def _decide_rows(days: float, n_files: int, n_prices: int,
+                 fast: bool) -> List[Dict]:
+    """``sweep.decide.*``: the decision workflow driven end-to-end on the
+    bench pricing grid (ISSUE 5). ``lane_fraction`` is the adaptive
+    refinement's simulated-lane count relative to an equivalent-resolution
+    dense grid (lower is better; the acceptance bar is <= 0.5, asserted in
+    ``tests/test_decide.py``); ``displaced_tb`` is the headline quantity —
+    on-prem disk displaced by the recommended cloud cache."""
+    from repro.sim.decide import decide
+
+    prices = [round(0.018 + 0.002 * i, 3) for i in range(n_prices)]
+    axes = {"base": "III", "days": days, "n_files": n_files,
+            "cache_tb": [10.0, 20.0, 40.0, 80.0],
+            "egress": ["internet", "direct", "interconnect"],
+            "storage_price": prices}
+    g = 4 * 3 * n_prices * 2  # configs incl. pricing fan-out, 2 seeds
+    driver = SweepDriver(backend="jax", tick=JAX_BENCH_TICK)
+    t0 = time.perf_counter()
+    report = decide(axes, driver, n_seeds=2,
+                    max_rounds=2 if fast else 3)
+    wall = time.perf_counter() - t0
+    ref = report.refine
+    return [
+        {"name": f"sweep.decide.workflow.{g}cfg",
+         "us_per_call": wall / g * 1e6,
+         "derived": driver.configs_run / wall if wall > 0 else 0.0},
+        {"name": f"sweep.decide.lane_fraction.{ref.lanes_used}of"
+                 f"{ref.dense_lanes}",
+         "us_per_call": wall * 1e6,
+         "derived": ref.lane_fraction},
+        {"name": "sweep.decide.displaced_tb",
+         "us_per_call": wall * 1e6,
+         "derived": report.displaced.displaced_tb
+         if report.displaced.min_cache_tb is not None else 0.0},
+    ]
+
+
 def _workload_rows(days: float, n_files: int) -> List[Dict]:
     specs = expand_grid({"base": "III", "days": days, "n_files": n_files,
                          "cache_tb": 20.0, "workload": list(WORKLOAD_PANEL)})
@@ -161,8 +205,7 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
     subset = jspecs[::stride][:n_sub]
     # dynamics-lane count for the row label (the pack-time dedup rule:
     # pricing-only fields do not change the simulated dynamics)
-    n_lanes = len({replace(s, egress="internet", storage_price=None)
-                   for s in jspecs})
+    n_lanes = len({dynamics_key(s) for s in jspecs})
     cold = run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
     warm = run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
     base = run_sweep(subset, workers=workers)
@@ -189,6 +232,8 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
     rows += _lane_scaling_rows(0.1, jfiles,
                                [16, 64] if fast else [16, 64, 256])
     rows += _workload_rows(jdays, jfiles)
+    rows += _decide_rows(jdays, jfiles, n_prices=3 if fast else 9,
+                         fast=fast)
     return rows
 
 

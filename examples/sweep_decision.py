@@ -1,72 +1,70 @@
 """Worked §5.3 decision example: is commercial cloud cache worth buying?
 
-Sweeps hot-cache size x egress pricing (tiered internet vs. the paper's
-peering alternatives) against an unlimited-disk baseline, then reads the
-cost/throughput Pareto front the way the paper's decision process does:
-pick the cheapest configuration that keeps (nearly) the baseline job
-throughput.
+Uses the decision-support layer (``repro.sim.decide``) end-to-end instead
+of eyeballing a fixed grid: a disk-only baseline is compared against a
+coarse cloud-cache grid that is adaptively refined around its
+cost/throughput frontier (seed replicas give every number a ± CI), the
+cheapest matching configuration's cache is trimmed to the smallest size
+that still holds the baseline's throughput (the displaced on-prem disk is
+the paper's headline quantity), and a bisection on the flat egress-price
+axis finds where the cloud option breaks even with buying disk.
 
     PYTHONPATH=src python examples/sweep_decision.py
+
+The same workflow at CLI scale: ``scripts/decide.py``; methodology:
+``docs/decision.md``.
 """
 
-import math
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.scenarios import ScenarioSpec, expand_grid
-from repro.sim.sweep import SweepResult, run_sweep
+from repro.sim.decide import OnPremDisk, decide
+from repro.sim.sweep import SweepDriver
 
-DAYS, FILES = 2.0, 20_000
+DAYS, FILES, SEEDS = 0.25, 2000, 2
 
 
 def main() -> None:
-    # Baseline: configuration I (unlimited site disk, no cloud involvement).
-    baseline = ScenarioSpec(base="I", days=DAYS, n_files=FILES, seed=0)
-    # Candidates: configuration III with a small hot cache, varying the
-    # cache size and the egress pricing option (§5.3 peering alternatives).
-    candidates = expand_grid({
-        "base": "III", "days": DAYS, "n_files": FILES, "seed": 0,
+    # Candidate grid: configuration III (100 TB cache + GCS cold tier in
+    # the paper; cache size swept here) across the §5.3 egress pricing
+    # alternatives. The coarse cache axis is deliberately sparse — the
+    # refinement fills in the frontier region on its own.
+    axes = {
+        "base": "III", "days": DAYS, "n_files": FILES,
         "cache_tb": [5.0, 20.0, 100.0],
         "egress": ["internet", "direct", "interconnect"],
-    })
+    }
+    driver = SweepDriver(backend="jax", tick=30.0)
+    onprem = OnPremDisk(usd_per_tb_month=15.0)
 
-    print(f"sweeping {1 + len(candidates)} configs "
-          f"({DAYS:g} days, {FILES} files/site) ...")
-    res = run_sweep([baseline] + candidates)
-    base_jobs = res.results[0].jobs_done
+    print(f"deciding over {3 * 3 * SEEDS}-config coarse grid "
+          f"({DAYS:g} days, {FILES} files/site, {SEEDS} seeds) ...")
+    report = decide(axes, driver, n_seeds=SEEDS, onprem=onprem,
+                    rel_tol=0.05, max_rounds=3)
+    report.stats.update(
+        sweep_calls=driver.sweep_calls,
+        configs_run=driver.configs_run,
+        lanes_simulated=driver.lanes_simulated,
+        sweep_wall_s=round(driver.wall_s, 2),
+    )
+    print()
+    print(report.to_markdown())
 
-    print(f"\n{'config':52s} {'jobs':>8s} {'vs base':>8s} {'cloud cost':>12s}")
-    for r in res.results:
-        print(f"{r.spec.label:52s} {r.jobs_done:8.0f} "
-              f"{100 * r.jobs_done / base_jobs:7.1f}% ${r.cost_usd:11,.2f}")
-
-    # The frontier among the *cloud candidates* (the baseline trivially
-    # dominates on cost — unlimited free disk is exactly what is not on
-    # offer).
-    cand = SweepResult(results=res.results[1:])
-    print("\nPareto front among cloud candidates (min cost, max jobs):")
-    for r in cand.pareto_front():
-        print(f"  {r.spec.label:50s} jobs={r.jobs_done:8.0f} "
-              f"cost=${r.cost_usd:,.2f}")
-
-    # The decision rule: cheapest candidate keeping >= 97% of baseline jobs.
-    ok = [r for r in cand.results if r.jobs_done >= 0.97 * base_jobs]
-    if ok:
-        best = min(ok, key=lambda r: r.cost_usd)
-        cache = ("unlimited" if best.spec.cache_tb is None
-                 or math.isinf(best.spec.cache_tb)
-                 else f"{best.spec.cache_tb:g} TB")
-        print(f"\ndecision: buy {cache} hot cache with '{best.spec.egress}' "
-              f"egress — {100 * best.jobs_done / base_jobs:.1f}% of baseline "
-              f"throughput at ${best.cost_usd:,.2f} cloud cost "
-              f"for the simulated window.")
+    d = report.displaced
+    if d.min_cache_tb is not None:
+        print(f"decision: buy a {d.min_cache_tb:g} TB/site hot cache with "
+              f"'{d.candidate.spec.egress}' egress — "
+              f"${d.cloud_budget_usd:,.2f} of cloud spend displaces "
+              f"{d.displaced_tb:,.1f} TB of on-prem disk at the baseline's "
+              "throughput (within CI).")
     else:
-        print("\ndecision: no candidate keeps 97% of baseline throughput; "
-              "grow the cache axis.")
+        print("decision: stay on-prem at this scale; no cloud candidate "
+              "matches the baseline's throughput.")
 
 
-# The guard is required: run_sweep's spawn-based worker processes re-import
-# this module, and an unguarded sweep would recurse into the pool bootstrap.
+# The guard stays: the cross-backend path spawns worker processes that
+# re-import this module, and an unguarded run would recurse into the pool
+# bootstrap.
 if __name__ == "__main__":
     main()

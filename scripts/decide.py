@@ -1,0 +1,243 @@
+"""Decision-support CLI (paper §5.3): should you buy the cloud cache?
+
+Drives ``repro.sim.decide`` against a candidate grid: adaptive frontier
+refinement, the displaced-disk headline solve, and the break-even price
+solve, emitting a markdown/JSON decision report.
+
+The default grid is the benchmark 216-config pricing grid (4 cache sizes
+x 3 egress options x 9 storage prices x 2 seeds)::
+
+    PYTHONPATH=src python scripts/decide.py --days 0.25 --files 1000
+
+Smoke-scale demo with a cross-backend check (``make decide-demo``)::
+
+    PYTHONPATH=src python scripts/decide.py --days 0.1 --files 1000 \
+        --cache-tb 5,20,80 --storage-price '' --max-rounds 2 --cross-check
+
+When ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the markdown report
+is appended to it so the decision table renders on the run's summary page.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.scenarios import EGRESS_OPTIONS, ScenarioSpec
+from repro.sim.decide import OnPremDisk, decide
+from repro.sim.sweep import SweepDriver, run_sweep
+
+#: The benchmark pricing grid's storage-price axis (USD/GB-month). Must
+#: stay in sync with ``benchmarks/bench_sweep.py`` (``_pricing_grid`` /
+#: ``_decide_rows``) so the CLI default really is the bench grid.
+BENCH_PRICES = ",".join(f"{0.018 + 0.002 * i:.3f}" for i in range(9))
+
+
+# Same comma-list convention as scripts/run_sweep.py ('base' = keep the
+# base configuration's value); duplicated because scripts are standalone.
+def _floats(text: str) -> list:
+    out = []
+    for tok in text.split(","):
+        tok = tok.strip().lower()
+        if tok:
+            out.append(None if tok == "base" else float(tok))
+    return out
+
+
+def _build_axes(args: argparse.Namespace) -> dict:
+    axes: dict = {"base": args.base, "days": args.days,
+                  "n_files": args.files}
+    axes["cache_tb"] = _floats(args.cache_tb)
+    if args.gcs_tb:
+        axes["gcs_limit_tb"] = _floats(args.gcs_tb)
+    if args.egress:
+        axes["egress"] = [e.strip() for e in args.egress.split(",")]
+    prices = _floats(args.storage_price)
+    if prices:
+        axes["storage_price"] = prices
+    if args.workload:
+        axes["workload"] = args.workload
+    return axes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Cloud-vs-on-prem decision report (adaptive frontier "
+                    "refinement + break-even solvers)")
+    ap.add_argument("--base", default="III", choices=["I", "II", "III"])
+    ap.add_argument("--days", type=float, default=0.25)
+    ap.add_argument("--files", type=int, default=1000)
+    ap.add_argument("--cache-tb", default="10,20,40,80",
+                    help="coarse cache-size axis in TB (refined adaptively)")
+    ap.add_argument("--gcs-tb", default="",
+                    help="optional cold-tier limit axis in TB")
+    ap.add_argument("--egress", default="internet,direct,interconnect",
+                    help=f"egress options from {','.join(EGRESS_OPTIONS)}")
+    ap.add_argument("--storage-price", default=BENCH_PRICES,
+                    help="storage-price axis, USD/GB-month ('' = none)")
+    ap.add_argument("--workload", default="",
+                    help="access-pattern model applied to grid and baseline")
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="replica seeds per config; metrics carry mean ± CI")
+    ap.add_argument("--first-seed", type=int, default=0)
+    ap.add_argument("--refine", action="append", metavar="AXIS",
+                    help="continuous axes to refine (default: cache_tb)")
+    ap.add_argument("--rel-tol", type=float, default=0.05,
+                    help="frontier tolerance: stop when frontier-adjacent "
+                         "axis gaps are within this fraction of the span")
+    ap.add_argument("--max-rounds", type=int, default=3)
+    ap.add_argument("--lane-budget", type=int, default=None,
+                    help="stop refining before exceeding this many "
+                         "simulated dynamics lanes")
+    ap.add_argument("--disk-usd-tb-month", type=float, default=15.0,
+                    help="on-prem disk TCO (USD per TB-month)")
+    ap.add_argument("--breakeven-axis", default="egress_price",
+                    choices=["egress_price", "storage_price", "none"])
+    ap.add_argument("--breakeven-lo", type=float, default=0.0)
+    ap.add_argument("--breakeven-hi", type=float, default=0.12)
+    ap.add_argument("--cache-floor", type=float, default=None,
+                    help="lower bound (TB) for the displaced-disk bisection")
+    ap.add_argument("--baseline-base", default="I",
+                    choices=["I", "II", "III"],
+                    help="disk-only baseline configuration (default I)")
+    ap.add_argument("--z", type=float, default=1.96,
+                    help="CI critical value (default 1.96 = 95%%)")
+    ap.add_argument("--backend", default="jax",
+                    choices=["jax", "process"])
+    ap.add_argument("--tick", type=float, default=60.0,
+                    help="jax-backend clock step, seconds (default 60)")
+    ap.add_argument("--lane-chunk", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--cross-check", action="store_true",
+                    help="re-evaluate the baseline and final frontier on "
+                         "the other backend; non-zero exit on disagreement")
+    ap.add_argument("--check-tol-jobs", type=float, default=0.10,
+                    help="cross-check jobs-done relative tolerance")
+    ap.add_argument("--check-tol-cost", type=float, default=0.20,
+                    help="cross-check cloud-cost relative tolerance")
+    ap.add_argument("--json", dest="json_out", default="",
+                    help="write the decision report as JSON")
+    ap.add_argument("--report", default="",
+                    help="write the markdown report to this path")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    try:
+        axes = _build_axes(args)
+        if not axes["cache_tb"]:
+            raise ValueError("--cache-tb needs at least one value")
+        baseline = ScenarioSpec(
+            base=args.baseline_base, days=args.days, n_files=args.files,
+            gcs_limit_tb=0.0,
+            workload=args.workload or "steady")
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    driver = SweepDriver(backend=args.backend, tick=args.tick,
+                         workers=args.workers, lane_chunk=args.lane_chunk)
+    if not args.quiet:
+        n0 = len(axes["cache_tb"]) * len(axes.get("egress", [1])) * \
+            max(len(axes.get("storage_price", [1])), 1) * args.seeds
+        print(f"decide: coarse grid {n0} configs, backend={args.backend}, "
+              f"{args.seeds} seed(s), refining "
+              f"{args.refine or ['cache_tb']} to rel_tol={args.rel_tol:g}",
+              flush=True)
+
+    try:
+        report = decide(
+            axes, driver,
+            baseline=baseline,
+            refine=tuple(args.refine) if args.refine else ("cache_tb",),
+            n_seeds=args.seeds, first_seed=args.first_seed,
+            rel_tol=args.rel_tol, max_rounds=args.max_rounds,
+            lane_budget=args.lane_budget,
+            onprem=OnPremDisk(usd_per_tb_month=args.disk_usd_tb_month),
+            breakeven_axis=(None if args.breakeven_axis == "none"
+                            else args.breakeven_axis),
+            breakeven_range=(args.breakeven_lo, args.breakeven_hi),
+            cache_floor=args.cache_floor,
+            z=args.z,
+        )
+    except ValueError as e:  # bad ranges/axes surface as CLI usage errors
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    report.stats.update(
+        backend=args.backend,
+        sweep_calls=driver.sweep_calls,
+        configs_run=driver.configs_run,
+        lanes_simulated=driver.lanes_simulated,
+        sweep_wall_s=round(driver.wall_s, 2),
+    )
+
+    md = report.to_markdown()
+    print(md)
+    if args.report:
+        if os.path.dirname(args.report):
+            os.makedirs(os.path.dirname(args.report), exist_ok=True)
+        with open(args.report, "w") as f:
+            f.write(md)
+        print(f"wrote {args.report}")
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    if args.json_out:
+        if os.path.dirname(args.json_out):
+            os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(report.to_json_dict(), f, indent=2)
+        print(f"wrote {args.json_out}")
+
+    if args.cross_check:
+        other = "process" if args.backend == "jax" else "jax"
+        # Check the *decision outputs* — baseline, chosen frontier config,
+        # trimmed displaced-disk candidate — not every probe the solvers
+        # visited: extreme bisection probes (sub-TB thrashing caches) sit
+        # exactly where the fixed-tick and event-driven clocks legitimately
+        # diverge, and are not part of the recommendation.
+        points = [report.baseline]
+        if report.chosen is not None:
+            points.append(report.chosen)
+        if report.displaced.candidate is not None:
+            points.append(report.displaced.candidate)
+        specs = list(dict.fromkeys(
+            r.spec for p in points for r in p.results))
+        if not args.quiet:
+            print(f"cross-check: re-running {len(specs)} configs on "
+                  f"backend={other} ...", flush=True)
+        ref = run_sweep(specs, backend=other, tick=args.tick,
+                        workers=args.workers)
+        mine = driver.run(specs)  # cached — no new simulation
+        bad = []
+        for a, b in zip(mine.results, ref.results):
+            dj = abs(a.jobs_done - b.jobs_done) / max(b.jobs_done, 1.0)
+            # absolute floor: a few-dollar bill shifts a lot relatively
+            dc = abs(a.cost_usd - b.cost_usd) / max(b.cost_usd, 20.0)
+            line = (f"  {a.spec.label:55s} jobs {a.jobs_done:8.0f} vs "
+                    f"{b.jobs_done:8.0f} ({dj:+.1%})  cost "
+                    f"${a.cost_usd:10,.2f} vs ${b.cost_usd:10,.2f} "
+                    f"({dc:+.1%})")
+            if dj > args.check_tol_jobs or dc > args.check_tol_cost:
+                bad.append(line)
+            elif not args.quiet:
+                print(line)
+        if bad:
+            print(f"cross-check FAILED ({len(bad)}/{len(specs)} configs "
+                  f"beyond jobs {args.check_tol_jobs:.0%} / cost "
+                  f"{args.check_tol_cost:.0%}):", file=sys.stderr)
+            for line in bad:
+                print(line, file=sys.stderr)
+            return 1
+        print(f"cross-check OK: {len(specs)} configs agree within "
+              f"jobs {args.check_tol_jobs:.0%} / cost "
+              f"{args.check_tol_cost:.0%} on both backends")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -64,6 +64,8 @@ def _build_axes(args: argparse.Namespace) -> dict:
         axes["egress"] = [e.strip() for e in args.egress.split(",")]
     if args.storage_price:
         axes["storage_price"] = _floats(args.storage_price)
+    if args.egress_price:
+        axes["egress_price"] = _floats(args.egress_price)
     if args.rate_scale:
         axes["job_rate_scale"] = _floats(args.rate_scale)
     if args.workload:
@@ -104,6 +106,10 @@ def main(argv=None) -> int:
                     help=f"comma list from {','.join(EGRESS_OPTIONS)}")
     ap.add_argument("--storage-price", default="",
                     help="comma list of USD/GB-month storage prices")
+    ap.add_argument("--egress-price", default="",
+                    help="comma list of flat USD/GiB egress prices "
+                         "(overrides the egress option's price table; "
+                         "billing-only, shares dynamics lanes)")
     ap.add_argument("--rate-scale", default="",
                     help="comma list of job-arrival-rate multipliers")
     ap.add_argument("--workload", action="append", metavar="MODEL",

@@ -51,6 +51,7 @@ class ScenarioSpec:
     gcs_limit_tb: Optional[float] = None  # cold-tier limit, TB (0 = disabled)
     egress: str = "internet"  # internet | direct | interconnect
     storage_price: Optional[float] = None  # USD per GB-month override
+    egress_price: Optional[float] = None  # flat USD/GiB egress override
     job_rate_scale: float = 1.0  # scales the job arrival rate
     # access-pattern model: "steady" | "diurnal" | "campaign" | "zipf-drift"
     # | "trace:PATH", with optional "name:key=value,..." parameters
@@ -71,6 +72,9 @@ class ScenarioSpec:
         if not self.job_rate_scale or self.job_rate_scale <= 0:
             raise ValueError(
                 f"job_rate_scale must be > 0, got {self.job_rate_scale!r}")
+        if self.egress_price is not None and self.egress_price < 0:
+            raise ValueError(
+                f"egress_price must be >= 0, got {self.egress_price!r}")
         # Unknown workload names, bad parameters, and missing/malformed
         # trace CSVs fail here — at spec-parse time — not in a worker.
         parse_workload(self.workload)
@@ -87,6 +91,8 @@ class ScenarioSpec:
             parts.append(f"gcs={gcs}")
         if self.storage_price is not None:
             parts.append(f"stor={self.storage_price:g}")
+        if self.egress_price is not None:
+            parts.append(f"egp={self.egress_price:g}")
         if self.job_rate_scale != 1.0:
             parts.append(f"rate={self.job_rate_scale:g}x")
         if self.workload != "steady":
@@ -117,6 +123,9 @@ def build_config(spec: ScenarioSpec) -> HCDCConfig:
     if spec.storage_price is not None:
         cfg.cost_model = replace(cfg.cost_model,
                                  storage_per_gb_month=spec.storage_price)
+    if spec.egress_price is not None:
+        cfg.cost_model = replace(cfg.cost_model,
+                                 flat_egress_per_gib=spec.egress_price)
     if spec.job_rate_scale != 1.0:
         # Scaling mu and sigma together scales the truncated-normal mean
         # exactly: max(kX, 0) = k max(X, 0) for k > 0.
@@ -191,9 +200,98 @@ def specs_from_mapping(doc: Mapping[str, Any]) -> List[ScenarioSpec]:
 
 def with_seeds(specs: Iterable[ScenarioSpec], n_seeds: int,
                first_seed: int = 0) -> List[ScenarioSpec]:
-    """Replicate each spec across ``n_seeds`` consecutive seeds."""
+    """Replicate each spec across ``n_seeds`` consecutive seeds.
+
+    On the batched backend each seed replica is a dedicated dynamics lane
+    (the seed feeds the catalogue/job-stream draw), so an N-seed grid packs
+    as N× the lanes and every reported metric can carry a seed-level
+    mean ± CI (``repro.sim.decide.summarize``).
+    """
+    if n_seeds < 1:
+        raise ValueError(f"n_seeds must be >= 1, got {n_seeds!r}")
     return [replace(s, seed=first_seed + k)
             for s in specs for k in range(n_seeds)]
+
+
+#: Spec fields that enter only the bill, never the simulated dynamics.
+#: Specs differing only here share one simulated lane on the batched
+#: backend and are billed separately (``pack_specs``); the decision layer
+#: exploits the same fact to price-sweep a lane for free.
+PRICING_FIELDS = ("egress", "storage_price", "egress_price")
+
+
+def dynamics_key(spec: ScenarioSpec) -> ScenarioSpec:
+    """Canonical per-lane identity: the spec with pricing-only fields reset.
+
+    Two specs with equal dynamics keys simulate identically (same catalogue,
+    same job stream, same tick dynamics) and differ at most in how the run
+    is billed. ``seed`` is *not* stripped: seed replicas are distinct lanes.
+    """
+    return replace(spec, egress="internet", storage_price=None,
+                   egress_price=None)
+
+
+def strip_seed(spec: ScenarioSpec) -> ScenarioSpec:
+    """Canonical across-seed group identity (seed reset to 0)."""
+    return replace(spec, seed=0)
+
+
+# --------------------------------------------------------------------------
+# Continuous-axis refinement helpers (the ``repro.sim.decide`` vocabulary).
+# --------------------------------------------------------------------------
+
+#: Spec axes that take ordered scalar values and can therefore be bisected
+#: by the adaptive refinement / break-even solvers. ``None`` entries (keep
+#: the base config) and ``inf`` (unlimited) are valid grid *levels* but are
+#: never interpolated against.
+CONTINUOUS_AXES = ("cache_tb", "gcs_limit_tb", "storage_price",
+                   "egress_price", "job_rate_scale")
+
+
+def axis_value(spec: ScenarioSpec, axis: str) -> Optional[float]:
+    """The spec's value on a continuous axis (``None`` = base default)."""
+    if axis not in CONTINUOUS_AXES:
+        raise ValueError(f"axis must be one of {CONTINUOUS_AXES}, "
+                         f"got {axis!r}")
+    return getattr(spec, axis)
+
+
+def with_axis(spec: ScenarioSpec, axis: str, value: float) -> ScenarioSpec:
+    """The spec moved to ``value`` on a continuous axis (re-validated)."""
+    if axis not in CONTINUOUS_AXES:
+        raise ValueError(f"axis must be one of {CONTINUOUS_AXES}, "
+                         f"got {axis!r}")
+    return replace(spec, **{axis: value})
+
+
+def refine_levels(values: Sequence[float], anchors: Sequence[float],
+                  rel_tol: float) -> List[float]:
+    """Midpoints to add around ``anchors`` in a sorted axis-level set.
+
+    For every anchor value (an axis coordinate of a frontier point) the
+    midpoint towards each finite neighbor in ``values`` is proposed, unless
+    the gap is already within ``rel_tol`` of the finite axis span. The
+    returned midpoints are deduplicated and sorted; non-finite levels
+    (``inf`` = unlimited) and ``None`` levels are never interpolated.
+    """
+    finite = sorted({float(v) for v in values
+                     if v is not None and math.isfinite(v)})
+    if len(finite) < 2:
+        return []
+    span = finite[-1] - finite[0]
+    if span <= 0:
+        return []
+    out = set()
+    for a in anchors:
+        if a is None or not math.isfinite(a) or a not in finite:
+            continue
+        i = finite.index(a)
+        for j in (i - 1, i + 1):
+            if 0 <= j < len(finite):
+                gap = abs(finite[j] - a)
+                if gap > rel_tol * span:
+                    out.add((a + finite[j]) / 2.0)
+    return sorted(out)
 
 
 # --------------------------------------------------------------------------
@@ -234,9 +332,10 @@ class PackedGrid:
     n_months: int  # month buckets covering the horizon
     full_months: int  # complete 30-day months (always billed)
     max_jobs_per_tick: int  # K bound for the per-tick submission loop
-    #: spec index -> dynamics lane. Egress pricing and storage price only
-    #: enter the bill, never the simulated dynamics, so specs that differ
-    #: only in pricing share one simulated lane and are billed separately
+    #: spec index -> dynamics lane. The ``PRICING_FIELDS`` (egress option,
+    #: storage price, flat egress price) only enter the bill, never the
+    #: simulated dynamics, so specs that differ only in pricing (equal
+    #: ``dynamics_key``) share one simulated lane and are billed separately
     #: (the paper's §5.3 "compare pricing options on the same workload").
     #: The ``workload`` axis *does* change the dynamics (it reshapes the
     #: packed job stream), so workload-only-differing specs never share a
@@ -343,15 +442,16 @@ def pack_specs(specs: Sequence[ScenarioSpec], tick: float = 10.0,
             raise ValueError("cold-deletion trimming requires "
                              "backend='process'")
 
-    # Deduplicate dynamics: egress choice and storage price feed only the
-    # cost model (``build_config`` touches nothing else for them), so specs
-    # that differ only there simulate as one lane and are billed per spec.
+    # Deduplicate dynamics: the ``PRICING_FIELDS`` (egress choice, storage
+    # price, flat egress price) feed only the cost model (``build_config``
+    # touches nothing else for them), so specs that differ only there
+    # simulate as one lane and are billed per spec.
     lane_index: Dict[ScenarioSpec, int] = {}
     lane_of = np.zeros(len(specs), dtype=np.int32)
     cfgs = []
     lane_specs: List[ScenarioSpec] = []
     for i, spec in enumerate(specs):
-        key = replace(spec, egress="internet", storage_price=None)
+        key = dynamics_key(spec)
         if key not in lane_index:
             lane_index[key] = len(cfgs)
             cfgs.append(all_cfgs[i])

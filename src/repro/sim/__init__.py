@@ -14,7 +14,11 @@ workflow (grids of configs -> cost/throughput frontier); ``batched`` is
 its vectorized lane-per-scenario JAX backend (``backend="jax"``);
 ``workload`` holds the pluggable access-pattern generators (diurnal /
 campaign / popularity-drift / trace-replay arrival schedules) both
-backends consume.
+backends consume. ``decide`` (imported as ``repro.sim.decide``, not
+re-exported here — it sits above ``repro.core`` in the layering) is the
+decision-support layer that drives the sweep in a loop: adaptive frontier
+refinement, displaced-disk and break-even-price bisections, seed-level
+CI frontier membership.
 """
 
 from repro.sim.engine import BaseSimulation, Schedulable

@@ -49,8 +49,15 @@ class GCSCostModel:
     class_a_per_10k: float = 0.05
     class_b_per_10k: float = 0.004
     peering: Optional[str] = None  # None | "direct" | "interconnect"
+    #: Flat egress price override (USD/GiB). Takes precedence over both the
+    #: peering table and the internet tiers — the §5.3 break-even solvers
+    #: sweep this axis continuously to find the price at which cloud
+    #: caching matches an on-prem-disk baseline.
+    flat_egress_per_gib: Optional[float] = None
 
     def egress_cost(self, monthly_bytes: float) -> float:
+        if self.flat_egress_per_gib is not None:
+            return self.flat_egress_per_gib * monthly_bytes / GiB
         if self.peering is not None:
             return PEERING_PRICES[self.peering] * monthly_bytes / GiB
         cost, prev, left = 0.0, 0.0, monthly_bytes

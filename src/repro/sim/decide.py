@@ -1,0 +1,900 @@
+"""Decision-support layer: the paper's §5.3 question, answered by search.
+
+The simulation exists "to assist with the decision process of using
+commercial cloud storage" — when does a cloud cache beat buying on-prem
+disk, and at what price point?  PRs 1–4 made evaluating a fixed scenario
+grid fast; this module *drives* that engine in a loop:
+
+- ``summarize`` / ``ci_frontier``: seed replicas (dedicated dynamics lanes
+  on the batched backend) fold into mean ± CI intervals per configuration,
+  and Pareto-frontier membership is decided on **interval overlap** — a
+  point is only dropped when some other point is better beyond the
+  uncertainty of both (Sim et al.: cache effectiveness is only trustworthy
+  with run-to-run error bars).
+- ``refine_frontier``: adaptive grid refinement. Start from a coarse
+  ``ScenarioSpec`` grid, find the cost/throughput frontier, recursively
+  bisect the continuous axes around the frontier until the local axis gap
+  is within tolerance or the lane budget is hit. Bisection localizes the
+  frontier at logarithmic cost where an equivalent-resolution dense grid
+  pays linearly (``RefineResult.dense_lanes``).
+- ``solve_displaced_disk``: the paper's headline claim, as a bisection —
+  the smallest cloud-cache size whose jobs-done still matches a disk-only
+  baseline's within CI bounds; the difference in provisioned on-prem
+  capacity is what the cloud budget displaces.
+- ``solve_break_even_price``: bisection on a billing-only price axis
+  (flat egress USD/GiB by default) for the cloud price at which the
+  cloud-cache configuration's total cost (cloud bill + on-prem cache
+  disk) matches the disk-only baseline's. Each narrowing round evaluates
+  its whole price ladder as one batch, so on the batched backend the
+  round simulates the candidate's dynamics lane once and re-bills every
+  probe from it (``pack_specs`` pricing-lane sharing).
+- ``decide``: the orchestrated workflow producing a ``DecisionReport``
+  (markdown/JSON) — the instrument the paper describes, pointed at a grid.
+
+Every solver takes an ``evaluate`` callable (``specs -> SweepResult``;
+normally a ``repro.sim.sweep.SweepDriver``, which memoizes across rounds
+and reuses the batched backend's compiled program), so the numerical
+machinery is testable against synthetic cost models without simulating.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
+
+from repro.core.scenarios import (
+    PRICING_FIELDS,
+    ScenarioSpec,
+    axis_value,
+    build_config,
+    dynamics_key,
+    expand_grid,
+    refine_levels,
+    strip_seed,
+    with_axis,
+    with_seeds,
+)
+from repro.sim.infrastructure import TB
+from repro.sim.sweep import ScenarioResult, SweepResult
+
+#: ``specs -> SweepResult`` — the solvers' evaluation protocol
+#: (``SweepDriver`` satisfies it; tests inject synthetic models).
+Evaluate = Callable[[Sequence[ScenarioSpec]], SweepResult]
+
+#: Two-sided normal critical value for the default 95% confidence level.
+Z_95 = 1.96
+
+
+# --------------------------------------------------------------------------
+# Seed-level uncertainty
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Interval:
+    """A metric's seed-level mean ± normal CI (half-width ``z·sd/√n``).
+
+    With a single seed the interval degenerates to the point estimate —
+    comparisons then reduce to the classic point-dominance rule, which the
+    report flags (single-seed decisions carry no uncertainty measure).
+    """
+
+    mean: float
+    sd: float
+    n: int
+    lo: float
+    hi: float
+
+    @classmethod
+    def from_samples(cls, xs: Sequence[float], z: float = Z_95) -> "Interval":
+        if not xs:
+            raise ValueError("cannot summarize an empty sample")
+        n = len(xs)
+        m = sum(xs) / n
+        if n < 2:
+            return cls(mean=m, sd=0.0, n=n, lo=m, hi=m)
+        var = sum((x - m) ** 2 for x in xs) / (n - 1)
+        sd = math.sqrt(var)
+        half = z * sd / math.sqrt(n)
+        return cls(mean=m, sd=sd, n=n, lo=m - half, hi=m + half)
+
+    def overlaps(self, other: "Interval") -> bool:
+        return self.lo <= other.hi and other.lo <= self.hi
+
+    def shifted(self, delta: float) -> "Interval":
+        """The interval of ``X + delta`` for a deterministic ``delta``."""
+        return Interval(mean=self.mean + delta, sd=self.sd, n=self.n,
+                        lo=self.lo + delta, hi=self.hi + delta)
+
+    def __format__(self, fmt: str) -> str:
+        if self.n < 2:
+            return format(self.mean, fmt)
+        return f"{self.mean:{fmt}} ± {(self.hi - self.lo) / 2:{fmt}}"
+
+
+@dataclass
+class DecisionPoint:
+    """One configuration's across-seed summary (spec is seed-stripped)."""
+
+    spec: ScenarioSpec
+    jobs: Interval
+    cost: Interval  # cloud bill, USD over the simulated window
+    results: List[ScenarioResult] = field(default_factory=list)
+    #: memo for ``OnPremDisk.provisioned_tb`` (price-model independent;
+    #: frontier dominance would otherwise rebuild an HCDCConfig per
+    #: pairwise comparison)
+    _provisioned_tb: Optional[float] = field(default=None, repr=False,
+                                             compare=False)
+
+    @property
+    def n_seeds(self) -> int:
+        return self.jobs.n
+
+    @property
+    def label(self) -> str:
+        return self.spec.label.rsplit(",seed=", 1)[0]
+
+
+def summarize(results: Sequence[ScenarioResult],
+              z: float = Z_95) -> List[DecisionPoint]:
+    """Group results by spec-minus-seed into CI'd decision points.
+
+    Order follows first appearance, so summaries of a sweep keep the grid
+    order.
+    """
+    groups: Dict[ScenarioSpec, List[ScenarioResult]] = {}
+    for r in results:
+        groups.setdefault(strip_seed(r.spec), []).append(r)
+    return [
+        DecisionPoint(
+            spec=key,
+            jobs=Interval.from_samples([r.jobs_done for r in rs], z),
+            cost=Interval.from_samples([r.cost_usd for r in rs], z),
+            results=rs,
+        )
+        for key, rs in groups.items()
+    ]
+
+
+#: Maps a point to the cost interval frontier dominance is judged on.
+#: Default: the cloud bill. ``OnPremDisk.total_interval`` judges on total
+#: (cloud + pro-rated on-prem disk) cost instead, which separates
+#: configurations whose cloud bills tie (pricing-deduped lanes) but whose
+#: bought capacity differs.
+CostOf = Callable[["DecisionPoint"], Interval]
+
+
+def _cloud_cost(p: "DecisionPoint") -> Interval:
+    return p.cost
+
+
+def _seed_costs(p: DecisionPoint) -> Optional[Dict[int, float]]:
+    """Per-seed cloud-bill samples, or ``None`` if seeds repeat."""
+    out = {r.spec.seed: r.cost_usd for r in p.results}
+    return out if len(out) == len(p.results) else None
+
+
+def ci_dominates(a: DecisionPoint, b: DecisionPoint,
+                 cost_of: CostOf = _cloud_cost) -> bool:
+    """``a`` beats ``b`` beyond both uncertainties: a's cost interval lies
+    at-or-below b's and a's jobs interval at-or-above b's, with at least
+    one strict separation. Overlapping intervals never dominate — the data
+    cannot distinguish the points, so both stay on the frontier.
+
+    Exception — paired samples: two points with *identical* per-seed
+    jobs-done samples ran the same dynamics realization (pricing variants
+    billed off one shared lane, or a saturated-cache plateau where every
+    size reproduces the same run). They are one experiment billed twice,
+    not two noisy ones, so their costs compare **per seed** (shifted by
+    each point's deterministic non-sample cost, e.g. on-prem disk), not
+    interval-vs-interval. Without this, a strictly-pricier storage-price
+    variant or a strictly-bigger cache with byte-identical dynamics would
+    "survive" on CI overlap.
+    """
+    ca, cb = cost_of(a), cost_of(b)
+    if a.jobs == b.jobs:  # same dynamics realization => paired comparison
+        sa, sb = _seed_costs(a), _seed_costs(b)
+        if sa is not None and sb is not None and set(sa) == set(sb):
+            # per-seed total = cloud sample + deterministic shift
+            da, db = ca.mean - a.cost.mean, cb.mean - b.cost.mean
+            diffs = [(sa[s] + da) - (sb[s] + db) for s in sa]
+            return all(d <= 0 for d in diffs) and any(d < 0 for d in diffs)
+    ge_jobs = a.jobs.lo >= b.jobs.hi
+    le_cost = ca.hi <= cb.lo
+    strict = a.jobs.lo > b.jobs.hi or ca.hi < cb.lo
+    return ge_jobs and le_cost and strict
+
+
+def ci_frontier(points: Sequence[DecisionPoint],
+                cost_of: CostOf = _cloud_cost) -> List[DecisionPoint]:
+    """Non-dominated points under ``ci_dominates``, cost-ascending.
+
+    Monotone in the evaluated set: for ``A ⊆ B``, every member of
+    ``ci_frontier(B)`` that lies in ``A`` is also in ``ci_frontier(A)``
+    (removing points can only remove dominators) — the property that lets
+    adaptive refinement discard points without ever discarding one a dense
+    grid would keep (pinned in ``tests/test_decide.py``).
+    """
+    front = [p for p in points
+             if not any(q is not p and ci_dominates(q, p, cost_of)
+                        for q in points)]
+    return sorted(front, key=lambda p: (cost_of(p).mean, -p.jobs.mean))
+
+
+# --------------------------------------------------------------------------
+# On-prem disk economics
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OnPremDisk:
+    """Total-cost-of-ownership model for on-prem cache disk.
+
+    ``usd_per_tb_month`` amortizes purchase + power + operation over the
+    hardware's service life (the default 15 USD/TB-month is a round
+    mid-range figure for replicated spinning disk; pass your own). Cost is
+    pro-rated over the simulated window — comparable to the cloud bill for
+    the same window.
+    """
+
+    usd_per_tb_month: float = 15.0
+
+    def provisioned_tb(self, point: DecisionPoint) -> float:
+        """Disk capacity the configuration must buy, in TB.
+
+        A finite ``cache_tb`` is bought per site. Unlimited sites
+        (``cache_tb`` inf, or base default ``None`` resolving to no limit)
+        must provision their peak usage; without a limit nothing is ever
+        deleted, so usage grows monotonically and the final per-site
+        ``disk_used`` *is* the peak (mean across seeds).
+
+        Memoized on the point (price-model independent): frontier
+        dominance evaluates this O(n²) times per round otherwise.
+        """
+        if point._provisioned_tb is not None:
+            return point._provisioned_tb
+        sites = build_config(point.spec).sites
+        total = 0.0
+        for name, limit in ((s.name, s.disk_limit) for s in sites):
+            if limit is not None and math.isfinite(limit):
+                total += limit / TB
+            else:
+                used = [r.metrics[f"{name}.disk_used_pb"] * 1000.0
+                        for r in point.results]
+                total += sum(used) / len(used)
+        point._provisioned_tb = total
+        return total
+
+    def cost_usd(self, point: DecisionPoint) -> float:
+        months = point.spec.days / 30.0
+        return self.provisioned_tb(point) * self.usd_per_tb_month * months
+
+    def total_usd(self, point: DecisionPoint) -> float:
+        """Cloud bill + pro-rated on-prem disk for the simulated window."""
+        return point.cost.mean + self.cost_usd(point)
+
+    def total_interval(self, point: DecisionPoint) -> Interval:
+        """Total-cost interval: the cloud bill's CI shifted by the
+        (deterministic) on-prem disk cost — a ``CostOf`` for frontier
+        dominance on total rather than cloud-only cost."""
+        return point.cost.shifted(self.cost_usd(point))
+
+
+# --------------------------------------------------------------------------
+# Adaptive grid refinement
+# --------------------------------------------------------------------------
+
+@dataclass
+class RefineRound:
+    index: int
+    new_specs: int
+    new_lanes: int
+    frontier_size: int
+
+
+@dataclass
+class RefineResult:
+    points: List[DecisionPoint]  # every evaluated config, stable order
+    frontier: List[DecisionPoint]
+    rounds: List[RefineRound]
+    axis_levels: Dict[str, List[float]]  # resolved levels per refined axis
+    lanes_used: int  # distinct dynamics lanes the refinement simulated
+    dense_lanes: int  # lanes of a uniform grid at the achieved resolution
+    budget_hit: bool = False
+
+    @property
+    def lane_fraction(self) -> float:
+        """Fraction of the equivalent dense grid's lanes actually paid."""
+        return self.lanes_used / self.dense_lanes if self.dense_lanes else 1.0
+
+
+def _dense_levels(levels: Sequence[float]) -> int:
+    """Level count of a uniform grid matching the finest resolved gap."""
+    finite = sorted({v for v in levels if v is not None and math.isfinite(v)})
+    if len(finite) < 2:
+        return len(finite)
+    gaps = [b - a for a, b in zip(finite, finite[1:]) if b > a]
+    if not gaps:
+        return len(finite)
+    span = finite[-1] - finite[0]
+    return int(math.floor(span / min(gaps) + 1e-9)) + 1
+
+
+def refine_frontier(axes: Mapping[str, Any], evaluate: Evaluate,
+                    refine: Sequence[str] = ("cache_tb",), *,
+                    n_seeds: int = 1, first_seed: int = 0,
+                    rel_tol: float = 0.05, max_rounds: int = 4,
+                    lane_budget: Optional[int] = None,
+                    cost_of: CostOf = _cloud_cost,
+                    z: float = Z_95) -> RefineResult:
+    """Adaptively refine a coarse grid around its cost/throughput frontier.
+
+    ``axes`` is an ``expand_grid`` mapping (without a ``seed`` axis — seed
+    replication is the solver's job, ``n_seeds``/``first_seed``). Each
+    round finds the CI frontier of everything evaluated so far, proposes
+    the midpoints between every frontier point and its nearest evaluated
+    neighbors on each refined axis (``repro.core.scenarios.refine_levels``),
+    and evaluates the proposals as one batch. Refinement stops when every
+    frontier-adjacent gap is within ``rel_tol`` of the axis span,
+    ``max_rounds`` is reached, or evaluating another round would exceed
+    ``lane_budget`` distinct dynamics lanes.
+
+    ``dense_lanes`` reports what a uniform (non-adaptive) grid resolving
+    the same finest axis gap over the full span would have simulated —
+    bisection pays log where the dense grid pays linear, which is the
+    lane-efficiency claim ``benchmarks/bench_sweep.py`` tracks.
+    """
+    if "seed" in axes:
+        raise ValueError("pass seed replication via n_seeds, not a seed axis")
+    unknown = [a for a in refine if a not in axes]
+    if unknown:
+        raise ValueError(f"refine axes not present in the grid: {unknown} "
+                         f"(grid axes: {sorted(axes)})")
+    refine = list(refine)
+    for a in refine:
+        axis_value(ScenarioSpec(), a)  # rejects non-continuous axes early
+        vals = axes[a]
+        if not isinstance(vals, (list, tuple)) or len(vals) < 2:
+            raise ValueError(f"refined axis {a!r} needs >= 2 grid levels")
+    base_specs = expand_grid(dict(axes))
+    specs = with_seeds(base_specs, n_seeds, first_seed)
+
+    results: Dict[ScenarioSpec, ScenarioResult] = {}
+    lanes: set = set()
+    axis_levels: Dict[str, set] = {
+        a: {axis_value(s, a) for s in base_specs} for a in refine}
+    rounds: List[RefineRound] = []
+    budget_hit = False
+
+    def run_batch(batch: List[ScenarioSpec]) -> int:
+        new_lanes = {dynamics_key(s) for s in batch} - lanes
+        res = evaluate(batch)
+        for s, r in zip(batch, res.results):
+            results[s] = r
+        lanes.update(new_lanes)
+        return len(new_lanes)
+
+    pending = specs
+    for i in range(max_rounds + 1):
+        if lane_budget is not None and pending:
+            would = len({dynamics_key(s) for s in pending} - lanes)
+            if lanes and len(lanes) + would > lane_budget:
+                budget_hit = True
+                break
+        n_lanes = run_batch(pending) if pending else 0
+        points = summarize(list(results.values()), z)
+        frontier = ci_frontier(points, cost_of)
+        rounds.append(RefineRound(index=i, new_specs=len(pending),
+                                  new_lanes=n_lanes,
+                                  frontier_size=len(frontier)))
+        if i == max_rounds:
+            break
+        # propose midpoints around the frontier on every refined axis
+        proposals: List[ScenarioSpec] = []
+        for a in refine:
+            anchors = [axis_value(p.spec, a) for p in frontier]
+            mids = refine_levels(sorted(
+                v for v in axis_levels[a]
+                if v is not None and math.isfinite(v)), anchors, rel_tol)
+            for p in frontier:
+                v = axis_value(p.spec, a)
+                if v is None or not math.isfinite(v):
+                    continue
+                for m in mids:
+                    # only bisect gaps adjacent to this frontier point
+                    if min(abs(m - u) for u in axis_levels[a]
+                           if u is not None
+                           and math.isfinite(u)) >= abs(m - v) - 1e-12:
+                        proposals.append(with_axis(p.spec, a, m))
+            axis_levels[a].update(axis_value(s, a) for s in proposals)
+        seen = set(results)
+        pending = [s for s in dict.fromkeys(with_seeds(
+            list(dict.fromkeys(proposals)), n_seeds, first_seed))
+            if s not in seen]
+        if not pending:
+            break
+
+    points = summarize(list(results.values()), z)
+    frontier = ci_frontier(points, cost_of)
+    # resolved levels come from *evaluated* specs only: on the budget-hit /
+    # early-break paths axis_levels still carries proposed-but-never-run
+    # midpoints, which would overstate the achieved resolution (and with
+    # it dense_lanes / lane_fraction, the acceptance metric)
+    resolved = {a: sorted({v for s in results
+                           if (v := axis_value(s, a)) is not None
+                           and math.isfinite(v)})
+                for a in refine}
+    # equivalent dense grid: per refined axis, a uniform grid at the finest
+    # resolved gap; the non-refined axis combinations (pricing axes dedupe
+    # away, seeds do not) multiply in unchanged. Billing-only refined axes
+    # (PRICING_FIELDS) contribute no dynamics lanes on either side — a
+    # dense price grid re-bills the same lanes — so they multiply by 1,
+    # keeping lane_fraction honest for price-axis refinement.
+    base_keys = {dynamics_key(s) for s in with_seeds(
+        [_pin_axes(s, refine, axes) for s in base_specs],
+        n_seeds, first_seed)}
+    dense = len(base_keys)
+    for a in refine:
+        if a not in PRICING_FIELDS:
+            dense *= max(_dense_levels(resolved[a]), 1)
+    return RefineResult(points=points, frontier=frontier, rounds=rounds,
+                        axis_levels=resolved, lanes_used=len(lanes),
+                        dense_lanes=dense, budget_hit=budget_hit)
+
+
+def _pin_axes(spec: ScenarioSpec, axes_to_pin: Sequence[str],
+              axes: Mapping[str, Any]) -> ScenarioSpec:
+    """Collapse refined axes to their first grid level (combo counting)."""
+    for a in axes_to_pin:
+        vals = axes[a]
+        spec = with_axis(spec, a, vals[0])
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Break-even solvers
+# --------------------------------------------------------------------------
+
+@dataclass
+class DisplacedDisk:
+    """Result of the displaced-capacity bisection (the headline claim)."""
+
+    min_cache_tb: Optional[float]
+    candidate: Optional[DecisionPoint]  # at the trimmed cache size
+    baseline_provisioned_tb: float
+    candidate_provisioned_tb: float
+    cloud_budget_usd: float  # the candidate's cloud bill for the window
+    probes: List[DecisionPoint] = field(default_factory=list)
+    rounds: int = 0
+    converged: bool = False
+    note: str = ""
+
+    @property
+    def displaced_tb(self) -> float:
+        return self.baseline_provisioned_tb - self.candidate_provisioned_tb
+
+
+def solve_displaced_disk(candidate: ScenarioSpec, baseline: DecisionPoint,
+                         evaluate: Evaluate, onprem: OnPremDisk, *,
+                         lo: Optional[float] = None,
+                         n_seeds: int = 1, first_seed: int = 0,
+                         rel_tol: float = 0.05, max_rounds: int = 12,
+                         z: float = Z_95) -> DisplacedDisk:
+    """Smallest cloud-cache size still matching the baseline's jobs-done.
+
+    Bisection on ``cache_tb`` over ``[lo, candidate.cache_tb]`` with the
+    predicate "jobs-done CI reaches the baseline's CI" (upper bound of the
+    candidate's interval ≥ lower bound of the baseline's — the two are
+    statistically indistinguishable or better). Jobs-done is monotone
+    non-decreasing in cache size, so the predicate is bisectable; each
+    probe simulates ``n_seeds`` fresh dynamics lanes. The difference in
+    provisioned on-prem capacity between the baseline and the trimmed
+    candidate is the disk the candidate's cloud budget displaces.
+
+    ``lo`` defaults to 1/16 of the candidate's cache. Terminates when the
+    bracket is within ``rel_tol`` of its initial width or ``max_rounds``
+    probes ran.
+    """
+    if candidate.cache_tb is None or not math.isfinite(candidate.cache_tb):
+        return DisplacedDisk(
+            min_cache_tb=None, candidate=None,
+            baseline_provisioned_tb=onprem.provisioned_tb(baseline),
+            candidate_provisioned_tb=float("nan"), cloud_budget_usd=0.0,
+            note="candidate has no explicit finite cache_tb to bisect "
+                 "(base-default or unlimited cache)")
+    hi = float(candidate.cache_tb)
+    lo = hi / 16.0 if lo is None else float(lo)
+    if not 0 < lo < hi:
+        raise ValueError(f"need 0 < lo < candidate cache, got lo={lo!r} "
+                         f"hi={hi!r}")
+    probes: List[DecisionPoint] = []
+
+    def probe(cache: float) -> DecisionPoint:
+        spec = with_axis(candidate, "cache_tb", cache)
+        res = evaluate(with_seeds([spec], n_seeds, first_seed))
+        point = summarize(res.results, z)[0]
+        probes.append(point)
+        return point
+
+    def ok(point: DecisionPoint) -> bool:
+        return point.jobs.hi >= baseline.jobs.lo
+
+    best = probe(hi)
+    if not ok(best):
+        return DisplacedDisk(
+            min_cache_tb=None, candidate=best,
+            baseline_provisioned_tb=onprem.provisioned_tb(baseline),
+            candidate_provisioned_tb=onprem.provisioned_tb(best),
+            cloud_budget_usd=best.cost.mean, probes=probes, rounds=1,
+            note="candidate never matches the baseline's jobs-done")
+    floor = probe(lo)
+    rounds = 2
+    if ok(floor):
+        best, hi = floor, lo  # even the floor matches; report it
+        converged = True
+    else:
+        width0 = hi - lo
+        while hi - lo > rel_tol * width0 and rounds < max_rounds:
+            mid = (lo + hi) / 2.0
+            p = probe(mid)
+            rounds += 1
+            if ok(p):
+                best, hi = p, mid
+            else:
+                lo = mid
+        # max_rounds can exhaust before the bracket reaches tolerance
+        converged = hi - lo <= rel_tol * width0
+    return DisplacedDisk(
+        min_cache_tb=hi, candidate=best,
+        baseline_provisioned_tb=onprem.provisioned_tb(baseline),
+        candidate_provisioned_tb=onprem.provisioned_tb(best),
+        cloud_budget_usd=best.cost.mean, probes=probes, rounds=rounds,
+        converged=converged,
+        note=f"jobs {best.jobs:.0f} vs baseline {baseline.jobs:.0f}")
+
+
+@dataclass
+class BreakEven:
+    """Result of the price-axis bisection."""
+
+    axis: str
+    price: Optional[float]  # None when no crossing exists in range
+    lo: float
+    hi: float
+    baseline_total_usd: float
+    candidate: Optional[DecisionPoint] = None  # billed at ~break-even price
+    rounds: int = 0
+    converged: bool = False
+    note: str = ""
+
+
+def solve_break_even_price(candidate: ScenarioSpec, baseline: DecisionPoint,
+                           evaluate: Evaluate, onprem: OnPremDisk, *,
+                           axis: str = "egress_price",
+                           lo: float = 0.0, hi: float = 0.12,
+                           n_seeds: int = 1, first_seed: int = 0,
+                           rel_tol: float = 0.01, max_rounds: int = 8,
+                           probes_per_round: int = 9,
+                           z: float = Z_95) -> BreakEven:
+    """Cloud price at which the candidate's total cost meets the baseline's.
+
+    Total cost = cloud bill at the probed price + pro-rated on-prem cost of
+    the candidate's own cache disk; the baseline's total is its (usually
+    zero) cloud bill + its provisioned disk. The bill is monotone
+    non-decreasing in any price axis, so the crossing is bisectable; below
+    the returned price the cloud configuration is the cheaper way to reach
+    its jobs-done level.
+
+    ``axis`` must be a billing-only spec field (``egress_price`` USD/GiB by
+    default, ``storage_price`` USD/GB-month also works), and each
+    narrowing round evaluates its whole ``probes_per_round`` price ladder
+    as **one** batch: on the batched backend the ladder dedupes to a
+    single simulation of the candidate's dynamics lane per round
+    (``pack_specs`` pricing-lane sharing is per packed grid, so batching
+    — not the driver cache — is what makes probes cheap), and the bracket
+    shrinks by ``probes_per_round - 1`` per round instead of 2. Returns
+    ``price=None`` with an explanatory note when the crossing is not
+    bracketed by ``[lo, hi]`` (cloud never / always breaks even in range).
+    ``rounds`` counts evaluation batches.
+    """
+    if not lo < hi:
+        raise ValueError(f"need lo < hi, got {lo!r} >= {hi!r}")
+    if probes_per_round < 3:
+        raise ValueError(f"probes_per_round must be >= 3, "
+                         f"got {probes_per_round!r}")
+    baseline_total = baseline.cost.mean + onprem.cost_usd(baseline)
+    rounds = 0
+
+    def batch(prices: List[float]) -> List[Tuple[float, DecisionPoint]]:
+        """Total cost per probe price — one evaluate call for the ladder."""
+        nonlocal rounds
+        specs = [with_axis(candidate, axis, p) for p in prices]
+        res = evaluate(with_seeds(specs, n_seeds, first_seed))
+        points = summarize(res.results, z)
+        rounds += 1
+        return [(p.cost.mean + onprem.cost_usd(p), p) for p in points]
+
+    (t_lo, p_lo), (t_hi, p_hi) = batch([lo, hi])
+    if t_lo > baseline_total:
+        return BreakEven(axis=axis, price=None, lo=lo, hi=hi,
+                         baseline_total_usd=baseline_total, candidate=p_lo,
+                         rounds=rounds,
+                         note=f"cloud never breaks even in range: even at "
+                              f"{axis}={lo:g} the total "
+                              f"${t_lo:,.2f} > baseline "
+                              f"${baseline_total:,.2f}")
+    if t_hi <= baseline_total:
+        return BreakEven(axis=axis, price=hi, lo=lo, hi=hi,
+                         baseline_total_usd=baseline_total, candidate=p_hi,
+                         rounds=rounds, converged=True,
+                         note=f"cloud breaks even across the whole range "
+                              f"(at {axis}={hi:g} total ${t_hi:,.2f} <= "
+                              f"baseline ${baseline_total:,.2f})")
+    width0 = hi - lo
+    best = p_lo
+    while hi - lo > rel_tol * width0 and rounds < max_rounds:
+        step = (hi - lo) / (probes_per_round - 1)
+        ladder = [lo + step * k for k in range(1, probes_per_round - 1)]
+        results = batch(ladder)
+        # monotone totals: the crossing sits between the last <=-baseline
+        # probe (new lo) and its successor (new hi)
+        below = [k for k, (t, _) in enumerate(results)
+                 if t <= baseline_total]
+        if below:
+            k = below[-1]
+            best = results[k][1]
+            lo = ladder[k]
+            hi = ladder[k + 1] if k + 1 < len(ladder) else hi
+        else:
+            hi = ladder[0]
+    converged = hi - lo <= rel_tol * width0  # max_rounds may exhaust first
+    return BreakEven(axis=axis, price=lo, lo=lo, hi=hi,
+                     baseline_total_usd=baseline_total, candidate=best,
+                     rounds=rounds, converged=converged,
+                     note=f"bisected to {axis} in [{lo:.6g}, {hi:.6g}]")
+
+
+# --------------------------------------------------------------------------
+# The orchestrated decision workflow
+# --------------------------------------------------------------------------
+
+@dataclass
+class DecisionReport:
+    baseline: DecisionPoint
+    refine: RefineResult
+    frontier: List[DecisionPoint]  # final, incl. solver-discovered points
+    chosen: Optional[DecisionPoint]
+    displaced: DisplacedDisk
+    breakeven: Optional[BreakEven]
+    onprem: OnPremDisk
+    z: float
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    def claim_holds(self) -> bool:
+        """The paper's qualitative claim: some frontier configuration
+        provisions less on-prem disk than the disk-only baseline while its
+        jobs-done matches the baseline's within CI bounds."""
+        base_tb = self.onprem.provisioned_tb(self.baseline)
+        for p in self.frontier:
+            if (self.onprem.provisioned_tb(p) < base_tb
+                    and p.jobs.hi >= self.baseline.jobs.lo):
+                return True
+        return False
+
+    # -- export ------------------------------------------------------------
+    def _point_row(self, p: DecisionPoint) -> Dict[str, Any]:
+        return {
+            "label": p.label,
+            "n_seeds": p.n_seeds,
+            "jobs_mean": p.jobs.mean, "jobs_lo": p.jobs.lo,
+            "jobs_hi": p.jobs.hi,
+            "cost_usd_mean": p.cost.mean, "cost_usd_lo": p.cost.lo,
+            "cost_usd_hi": p.cost.hi,
+            "onprem_tb": self.onprem.provisioned_tb(p),
+            "total_usd": self.onprem.total_usd(p),
+        }
+
+    def to_json_dict(self) -> Dict[str, Any]:
+        d = self.displaced
+        return {
+            "z": self.z,
+            "claim_holds": self.claim_holds(),
+            "baseline": self._point_row(self.baseline),
+            "chosen": self._point_row(self.chosen) if self.chosen else None,
+            "frontier": [self._point_row(p) for p in self.frontier],
+            "refine": {
+                "rounds": [vars(r) for r in self.refine.rounds],
+                "axis_levels": self.refine.axis_levels,
+                "lanes_used": self.refine.lanes_used,
+                "dense_lanes": self.refine.dense_lanes,
+                "lane_fraction": self.refine.lane_fraction,
+                "budget_hit": self.refine.budget_hit,
+            },
+            "displaced_disk": {
+                "min_cache_tb": d.min_cache_tb,
+                "baseline_provisioned_tb": d.baseline_provisioned_tb,
+                # strict-JSON safety: the no-candidate path carries NaN
+                "candidate_provisioned_tb": (
+                    None if math.isnan(d.candidate_provisioned_tb)
+                    else d.candidate_provisioned_tb),
+                "displaced_tb": (None if math.isnan(d.displaced_tb)
+                                 else d.displaced_tb),
+                "cloud_budget_usd": d.cloud_budget_usd,
+                "rounds": d.rounds,
+                "converged": d.converged,
+                "note": d.note,
+            },
+            "break_even": None if self.breakeven is None else {
+                "axis": self.breakeven.axis,
+                "price": self.breakeven.price,
+                "bracket": [self.breakeven.lo, self.breakeven.hi],
+                "baseline_total_usd": self.breakeven.baseline_total_usd,
+                "rounds": self.breakeven.rounds,
+                "converged": self.breakeven.converged,
+                "note": self.breakeven.note,
+            },
+            "onprem_usd_per_tb_month": self.onprem.usd_per_tb_month,
+            "stats": self.stats,
+        }
+
+    def to_markdown(self) -> str:
+        base_tb = self.onprem.provisioned_tb(self.baseline)
+        lines = [
+            "# Cloud-cache decision report",
+            "",
+            f"Baseline (disk-only) `{self.baseline.label}`: "
+            f"jobs {self.baseline.jobs:.0f}, provisions "
+            f"{base_tb:,.1f} TB on-prem "
+            f"(${self.onprem.total_usd(self.baseline):,.2f} for the "
+            f"window at ${self.onprem.usd_per_tb_month:g}/TB-month).",
+            "",
+            "## Cost/throughput frontier (interval-overlap membership, "
+            f"z={self.z:g})",
+            "",
+            "| config | jobs done | cloud $ | on-prem TB | total $ |",
+            "|---|---|---|---|---|",
+        ]
+        for p in self.frontier:
+            lines.append(
+                f"| `{p.label}` | {p.jobs:.0f} | {p.cost:,.2f} | "
+                f"{self.onprem.provisioned_tb(p):,.1f} | "
+                f"{self.onprem.total_usd(p):,.2f} |")
+        r = self.refine
+        lines += [
+            "",
+            "## Adaptive refinement",
+            "",
+            f"{len(r.rounds)} round(s), {r.lanes_used} dynamics lanes "
+            f"simulated vs {r.dense_lanes} for an equivalent-resolution "
+            f"dense grid ({100 * r.lane_fraction:.0f}% of dense"
+            + (", lane budget hit" if r.budget_hit else "") + ").",
+            "",
+        ]
+        for a, levels in r.axis_levels.items():
+            lines.append(f"- `{a}` resolved levels: "
+                         + ", ".join(f"{v:g}" for v in levels))
+        d = self.displaced
+        lines += ["", "## Headline: displaced on-prem disk", ""]
+        if d.min_cache_tb is not None:
+            lines += [
+                f"A `{d.candidate.label}` cloud cache "
+                f"(${d.cloud_budget_usd:,.2f} cloud spend for the window) "
+                f"matches the baseline's jobs-done within CI while "
+                f"provisioning {d.candidate_provisioned_tb:,.1f} TB — "
+                f"**displacing {d.displaced_tb:,.1f} TB of on-prem disk** "
+                f"({d.rounds} bisection probes; {d.note}).",
+            ]
+        else:
+            lines += [f"No displacement found: {d.note}"]
+        if self.breakeven is not None:
+            b = self.breakeven
+            lines += ["", "## Break-even cloud price", ""]
+            if b.price is not None:
+                lines += [
+                    f"On the `{b.axis}` axis the candidate's total cost "
+                    f"meets the baseline's ${b.baseline_total_usd:,.2f} at "
+                    f"**{b.price:.6g}** (bracket [{b.lo:.6g}, {b.hi:.6g}], "
+                    f"{b.rounds} probes). Below that price the cloud cache "
+                    "is the cheaper way to this throughput.",
+                ]
+            else:
+                lines += [f"{b.note}."]
+        lines += [
+            "",
+            f"**Paper's claim {'HOLDS' if self.claim_holds() else 'does NOT hold'}** "
+            "at this scale: a frontier cloud-cache configuration "
+            "provisions less on-prem disk than the disk-only baseline at "
+            "matching jobs-done (within CI bounds).",
+        ]
+        if self.stats:
+            lines += ["", "## Run stats", ""]
+            lines += [f"- {k}: {v}" for k, v in self.stats.items()]
+        return "\n".join(lines) + "\n"
+
+
+def decide(axes: Mapping[str, Any], evaluate: Evaluate, *,
+           baseline: Optional[ScenarioSpec] = None,
+           refine: Sequence[str] = ("cache_tb",),
+           n_seeds: int = 2, first_seed: int = 0,
+           rel_tol: float = 0.05, max_rounds: int = 3,
+           lane_budget: Optional[int] = None,
+           onprem: OnPremDisk = OnPremDisk(),
+           breakeven_axis: Optional[str] = "egress_price",
+           breakeven_range: Tuple[float, float] = (0.0, 0.12),
+           cache_floor: Optional[float] = None,
+           z: float = Z_95) -> DecisionReport:
+    """The full §5.3 decision workflow against a candidate grid.
+
+    1. Evaluate the disk-only ``baseline`` (default: configuration I —
+       unlimited on-prem disk, no cloud — at the grid's days/files).
+    2. ``refine_frontier`` the candidate ``axes`` adaptively.
+    3. Choose the frontier point matching the baseline's jobs-done within
+       CI at the lowest total (cloud + on-prem) cost.
+    4. ``solve_displaced_disk``: trim its cache to the smallest size still
+       matching — the displaced on-prem capacity is the headline.
+    5. ``solve_break_even_price`` on ``breakeven_axis`` (skipped when
+       ``None``).
+
+    The final frontier folds in the displacement solver's probe points
+    (they are real configurations at real prices); break-even probes are
+    excluded — their pricing is hypothetical.
+    """
+    if baseline is None:
+        days = axes.get("days", 2.0)
+        n_files = axes.get("n_files", 20_000)
+        if isinstance(days, (list, tuple)) or isinstance(n_files,
+                                                         (list, tuple)):
+            raise ValueError("days/n_files must be scalars to derive the "
+                             "default baseline; pass baseline= explicitly")
+        baseline = ScenarioSpec(base="I", days=days, n_files=n_files,
+                                gcs_limit_tb=0.0)
+        # a scalar workload / arrival-rate axis applies to the whole grid;
+        # the baseline must see the same access stream to be comparable
+        for f in ("workload", "job_rate_scale"):
+            v = axes.get(f)
+            if v is not None and not isinstance(v, (list, tuple)):
+                baseline = replace(baseline, **{f: v})
+    base_res = evaluate(with_seeds([baseline], n_seeds, first_seed))
+    base_point = summarize(base_res.results, z)[0]
+
+    # Frontier dominance on *total* cost: pricing-deduped lanes tie on the
+    # cloud bill, but bigger caches still buy more on-prem disk — total
+    # cost separates them and points the refinement at the knee.
+    cost_of = onprem.total_interval
+    ref = refine_frontier(axes, evaluate, refine, n_seeds=n_seeds,
+                          first_seed=first_seed, rel_tol=rel_tol,
+                          max_rounds=max_rounds, lane_budget=lane_budget,
+                          cost_of=cost_of, z=z)
+
+    matching = [p for p in ref.frontier if p.jobs.hi >= base_point.jobs.lo]
+    pool = matching or ref.frontier
+    chosen = min(pool, key=onprem.total_usd) if pool else None
+
+    if chosen is not None:
+        disp = solve_displaced_disk(
+            chosen.spec, base_point, evaluate, onprem, lo=cache_floor,
+            n_seeds=n_seeds, first_seed=first_seed, z=z)
+    else:
+        disp = DisplacedDisk(min_cache_tb=None, candidate=None,
+                             baseline_provisioned_tb=onprem.provisioned_tb(
+                                 base_point),
+                             candidate_provisioned_tb=float("nan"),
+                             cloud_budget_usd=0.0,
+                             note="no frontier candidate")
+
+    breakeven = None
+    # gate on a *successful* displacement solve: the failed path also
+    # carries a candidate (the failing probe), and pricing a config that
+    # under-delivers the baseline's throughput is not a break-even
+    if breakeven_axis is not None and disp.min_cache_tb is not None:
+        lo, hi = breakeven_range
+        breakeven = solve_break_even_price(
+            disp.candidate.spec, base_point, evaluate, onprem,
+            axis=breakeven_axis, lo=lo, hi=hi, n_seeds=n_seeds,
+            first_seed=first_seed, z=z)
+
+    pool = {p.spec: p for p in ref.points + disp.probes}  # dedupe re-probes
+    frontier = ci_frontier(list(pool.values()), cost_of)
+    return DecisionReport(baseline=base_point, refine=ref, frontier=frontier,
+                          chosen=chosen, displaced=disp, breakeven=breakeven,
+                          onprem=onprem, z=z)

@@ -290,3 +290,73 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
                 if progress is not None:
                     progress(done, len(specs), results[i])
     return SweepResult(results=list(results), wall_s=time.perf_counter() - t0)
+
+
+class SweepDriver:
+    """Iterative ``run_sweep`` front-end with cross-round memoization.
+
+    The decision-support layer (``repro.sim.decide``) calls the sweep *in a
+    loop* — adaptive grid refinement, break-even bisection — where
+    successive rounds re-request many already-simulated specs plus a few
+    new ones. The driver executes only the unseen specs (one ``run_sweep``
+    call per round, so new specs still batch into one packed grid on the
+    jax backend, whose K/J shape bucketing keeps the compiled program
+    cached across rounds) and answers the rest from memory.
+
+    It also keeps the books the decision layer reports on:
+
+    - ``lanes_simulated``: distinct dynamics lanes ever requested (the
+      ``repro.core.scenarios.dynamics_key`` identity — the
+      backend-independent lane-efficiency denominator). Note the memo is
+      per exact spec: pricing-only variants of a cached spec arriving in
+      a *later* call still re-simulate their lane (``pack_specs`` dedups
+      within one packed grid only), which is why the decide solvers batch
+      each round's pricing probes into one call;
+    - ``configs_run`` / ``sweep_calls`` / ``wall_s``: raw work counters.
+    """
+
+    def __init__(self, backend: str = "jax", tick: float = 10.0,
+                 workers: Optional[int] = None,
+                 lane_chunk: Optional[int] = None,
+                 devices: Optional[Sequence[Any]] = None,
+                 progress: Optional[Callable[[int, int, ScenarioResult],
+                                             None]] = None):
+        self.backend = backend
+        self.tick = tick
+        self.workers = workers
+        self.lane_chunk = lane_chunk
+        self.devices = devices
+        self.progress = progress
+        self._cache: Dict["ScenarioSpec", ScenarioResult] = {}
+        self._lane_keys: set = set()
+        self.sweep_calls = 0
+        self.configs_run = 0
+        self.wall_s = 0.0
+
+    @property
+    def lanes_simulated(self) -> int:
+        return len(self._lane_keys)
+
+    def __call__(self, specs: Sequence["ScenarioSpec"]) -> SweepResult:
+        return self.run(specs)
+
+    def run(self, specs: Sequence["ScenarioSpec"]) -> SweepResult:
+        """Results for ``specs`` in order, simulating only the unseen ones."""
+        from repro.core.scenarios import dynamics_key
+
+        specs = list(specs)
+        new = [s for s in dict.fromkeys(specs) if s not in self._cache]
+        t0 = time.perf_counter()
+        if new:
+            res = run_sweep(new, workers=self.workers,
+                            progress=self.progress, backend=self.backend,
+                            tick=self.tick, lane_chunk=self.lane_chunk,
+                            devices=self.devices)
+            self.sweep_calls += 1
+            self.configs_run += len(new)
+            self.wall_s += res.wall_s
+            for spec, result in zip(new, res.results):
+                self._cache[spec] = result
+                self._lane_keys.add(dynamics_key(spec))
+        return SweepResult(results=[self._cache[s] for s in specs],
+                           wall_s=time.perf_counter() - t0)

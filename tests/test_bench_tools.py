@@ -1,0 +1,109 @@
+"""Unit tests for ``scripts/check_bench_regression.py``.
+
+The CI gate must distinguish "passed" (0) from "regressed" (1), "baseline
+at the wrong scale" (3), and "no baseline" (4) — previously the last two
+shared codes with failure and success respectively, so a workflow could
+not tell a skipped comparison from a green one.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+
+def _load():
+    path = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        "check_bench_regression.py")
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def cli():
+    return _load()
+
+
+def _write(path, fast, rows):
+    doc = {"fast": fast,
+           "benches": [{"name": n, "us_per_call": 1.0, "derived": d}
+                       for n, d in rows]}
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def test_exit_ok_within_tolerance(cli, tmp_path):
+    base = _write(tmp_path / "base.json", True,
+                  [("sweep.jax.warm.216cfg8lane", 100.0)])
+    cur = _write(tmp_path / "cur.json", True,
+                 [("sweep.jax.warm.216cfg8lane", 80.0)])  # -20% < 30%
+    rc = cli.main([base, cur, "--rows", "sweep.jax.warm", "--summary", ""])
+    assert rc == cli.EXIT_OK == 0
+
+
+def test_exit_regression_on_throughput_drop(cli, tmp_path):
+    base = _write(tmp_path / "base.json", True, [("sweep.jax.warm", 100.0)])
+    cur = _write(tmp_path / "cur.json", True, [("sweep.jax.warm", 50.0)])
+    rc = cli.main([base, cur, "--rows", "sweep.jax.warm", "--summary", ""])
+    assert rc == cli.EXIT_REGRESSION == 1
+
+
+def test_exit_scale_mismatch_is_distinct(cli, tmp_path):
+    base = _write(tmp_path / "base.json", False, [("sweep.jax.warm", 100.0)])
+    cur = _write(tmp_path / "cur.json", True, [("sweep.jax.warm", 100.0)])
+    rc = cli.main([base, cur, "--rows", "sweep.jax.warm", "--summary", ""])
+    assert rc == cli.EXIT_SCALE_MISMATCH == 3
+    # distinct from both success and regression
+    assert rc not in (cli.EXIT_OK, cli.EXIT_REGRESSION, cli.EXIT_NO_BASELINE)
+
+
+def test_exit_no_baseline_is_distinct(cli, tmp_path):
+    cur = _write(tmp_path / "cur.json", True, [("sweep.jax.warm", 100.0)])
+    rc = cli.main([str(tmp_path / "missing.json"), cur,
+                   "--rows", "sweep.jax.warm", "--summary", ""])
+    assert rc == cli.EXIT_NO_BASELINE == 4
+    assert rc not in (cli.EXIT_OK, cli.EXIT_REGRESSION,
+                      cli.EXIT_SCALE_MISMATCH)
+
+
+def test_exit_no_current_when_results_file_missing(cli, tmp_path):
+    base = _write(tmp_path / "base.json", True, [("sweep.jax.warm", 100.0)])
+    rc = cli.main([base, str(tmp_path / "never_written.json"),
+                   "--rows", "sweep.jax.warm", "--summary", ""])
+    assert rc == cli.EXIT_NO_CURRENT == 5
+    assert rc not in (cli.EXIT_OK, cli.EXIT_REGRESSION,
+                      cli.EXIT_SCALE_MISMATCH, cli.EXIT_NO_BASELINE)
+
+
+def test_missing_row_is_skipped_not_failed(cli, tmp_path):
+    base = _write(tmp_path / "base.json", True, [("sweep.jax.warm", 100.0)])
+    cur = _write(tmp_path / "cur.json", True,
+                 [("sweep.jax.warm", 99.0), ("sweep.other", 1.0)])
+    rc = cli.main([base, cur, "--rows", "sweep.jax.warm", "sweep.gone",
+                   "--summary", ""])
+    assert rc == cli.EXIT_OK
+
+
+def test_markdown_summary_written_with_deltas(cli, tmp_path):
+    base = _write(tmp_path / "base.json", True, [("sweep.jax.warm", 100.0)])
+    cur = _write(tmp_path / "cur.json", True, [("sweep.jax.warm", 50.0)])
+    summary = tmp_path / "summary.md"
+    rc = cli.main([base, cur, "--rows", "sweep.jax.warm",
+                   "--summary", str(summary)])
+    assert rc == cli.EXIT_REGRESSION
+    text = summary.read_text()
+    assert "| `sweep.jax.warm` |" in text
+    assert "-50.0%" in text and "REGRESSION" in text
+
+
+def test_table_only_mode_skips_comparison(cli, tmp_path):
+    cur = _write(tmp_path / "cur.json", False, [("sweep.jax.warm", 123.0)])
+    summary = tmp_path / "summary.md"
+    rc = cli.main(["-", cur, "--rows", "sweep.jax.warm", "sweep.gone",
+                   "--summary", str(summary)])
+    assert rc == cli.EXIT_OK
+    text = summary.read_text()
+    assert "123" in text and "missing" in text

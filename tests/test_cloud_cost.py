@@ -69,6 +69,36 @@ def test_peering_cheaper_than_internet_at_scale():
     assert inter < direct < internet
 
 
+def test_flat_egress_override_takes_precedence():
+    """The break-even solvers' flat USD/GiB axis overrides both the
+    peering table and the internet tiers (repro.sim.decide)."""
+    flat = GCSCostModel(flat_egress_per_gib=0.007)
+    assert flat.egress_cost(3 * TiB) == pytest.approx(3 * 1024 * 0.007)
+    both = GCSCostModel(peering="direct", flat_egress_per_gib=0.007)
+    assert both.egress_cost(1 * GiB) == pytest.approx(0.007)
+    zero = GCSCostModel(flat_egress_per_gib=0.0)
+    assert zero.egress_cost(5 * TiB) == 0.0
+
+
+def test_egress_price_spec_flows_into_bill_and_shares_lane():
+    """ScenarioSpec.egress_price reaches the built config's cost model and
+    stays billing-only: pack_specs gives price variants one dynamics lane."""
+    from repro.core.scenarios import ScenarioSpec, build_config, pack_specs
+
+    spec = ScenarioSpec(base="III", days=0.1, n_files=200,
+                        egress_price=0.007)
+    assert build_config(spec).cost_model.flat_egress_per_gib == 0.007
+    with pytest.raises(ValueError, match="egress_price"):
+        ScenarioSpec(base="III", egress_price=-0.01)
+    variants = [spec, ScenarioSpec(base="III", days=0.1, n_files=200),
+                ScenarioSpec(base="III", days=0.1, n_files=200,
+                             egress_price=0.05)]
+    grid = pack_specs(variants)
+    assert grid.n_specs == 3 and grid.n_lanes == 1
+    assert [cm.flat_egress_per_gib for cm in grid.cost_models] == \
+        [0.007, None, 0.05]
+
+
 def test_peering_pricier_than_top_tier_refund_never_happens():
     # sanity: flat 0.05 < blended internet price for any volume
     for vol in (1 * GiB, 1 * TiB, 10 * TiB, 100 * TiB):

@@ -143,3 +143,93 @@ def test_elastic_planner_divisibility(chips, tp_pow):
     assert plan.data >= 1
     assert plan.devices <= max(chips, tp)
     assert 256 % max(plan.data * plan.pods, 1) == 0 or plan.data == 1
+
+
+# ---------------------------------------------------------------------------
+# Decision-layer properties (ISSUE 5): interval-overlap frontier membership
+# is subset-monotone, and adaptive refinement never drops an evaluated
+# point that a dense grid over the same resolved levels would keep on its
+# frontier.
+# ---------------------------------------------------------------------------
+
+def _decision_points(data):
+    from repro.core.scenarios import ScenarioSpec
+    from repro.sim.decide import summarize
+    from repro.sim.sweep import ScenarioResult
+
+    n_pts = data.draw(st.integers(3, 12))
+    n_seeds = data.draw(st.integers(1, 4))
+    results = []
+    for i in range(n_pts):
+        spec = ScenarioSpec(base="III", days=0.1, n_files=100,
+                            cache_tb=float(i + 1))
+        for s in range(n_seeds):
+            jobs = data.draw(st.floats(0, 1000, allow_nan=False))
+            cost = data.draw(st.floats(0, 500, allow_nan=False))
+            results.append(ScenarioResult(
+                spec=spec.__class__(**{**spec.to_dict(), "seed": s}),
+                metrics={"jobs_done": jobs}, storage_usd=cost,
+                network_usd=0.0, ops_usd=0.0, wall_s=0.0, events=0))
+    return summarize(results)
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_ci_frontier_subset_monotone_property(data):
+    """For A ⊆ B: ci_frontier(B) ∩ A ⊆ ci_frontier(A). Removing points can
+    only remove dominators, never create one — so a refinement that
+    evaluates a subset of a dense grid can never discard a point the dense
+    grid would keep."""
+    from repro.sim.decide import ci_frontier
+
+    points = _decision_points(data)
+    mask = [data.draw(st.booleans()) for _ in points]
+    subset = [p for p, keep in zip(points, mask) if keep]
+    full_front = ci_frontier(points)
+    sub_front = ci_frontier(subset)
+    for p in full_front:
+        if p in subset:
+            assert p in sub_front
+
+
+@given(st.floats(5.0, 40.0), st.floats(10.0, 60.0),
+       st.floats(0.0, 10.0), st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_refinement_never_drops_dense_frontier_point(jobs_tau, cost_tau,
+                                                     seed_spread, n_seeds):
+    """Refinement on a random monotone synthetic cost model: every
+    evaluated point that the dense grid over the refinement's resolved
+    levels keeps on its frontier is on the refined frontier too."""
+    import math as _math
+
+    from repro.core.scenarios import expand_grid, with_seeds
+    from repro.sim.decide import ci_frontier, refine_frontier, summarize
+    from repro.sim.sweep import ScenarioResult, SweepResult
+
+    def jobs_fn(s):
+        c = s.cache_tb if s.cache_tb is not None else 100.0
+        return 1000.0 * (1 - _math.exp(-c / jobs_tau)) \
+            + seed_spread * (s.seed % 3)
+
+    def cost_fn(s):
+        c = s.cache_tb if s.cache_tb is not None else 100.0
+        return 15.0 + 150.0 * _math.exp(-c / cost_tau)
+
+    def evaluate(specs):
+        return SweepResult(results=[ScenarioResult(
+            spec=s, metrics={"jobs_done": jobs_fn(s)},
+            storage_usd=cost_fn(s), network_usd=0.0, ops_usd=0.0,
+            wall_s=0.0, events=0) for s in specs])
+
+    axes = {"base": "III", "days": 0.1, "n_files": 100,
+            "cache_tb": [5.0, 20.0, 40.0, 80.0]}
+    res = refine_frontier(axes, evaluate, ("cache_tb",), n_seeds=n_seeds,
+                          rel_tol=0.05, max_rounds=4)
+    dense_axes = dict(axes)
+    dense_axes["cache_tb"] = res.axis_levels["cache_tb"]
+    dense = summarize(evaluate(
+        with_seeds(expand_grid(dense_axes), n_seeds)).results)
+    dense_front = {p.spec for p in ci_frontier(dense)}
+    evaluated = {p.spec for p in res.points}
+    refined_front = {p.spec for p in res.frontier}
+    assert dense_front & evaluated <= refined_front

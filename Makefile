@@ -44,10 +44,13 @@ sweep-demo:
 # Decision-layer smoke demo (docs/decision.md): coarse 2-round adaptive
 # refinement + displaced-disk and break-even solves on the batched
 # backend, then the decision points re-run on the event-driven backend
-# (--cross-check) so both engines vouch for the recommendation.
+# (--cross-check) so both engines vouch for the recommendation. Runs
+# through a persistent result cache (docs/simulation.md, 'Result cache'):
+# a repeated invocation simulates zero lanes and answers from disk.
 decide-demo:
 	$(PY) scripts/decide.py --days 0.1 --files 1000 --cache-tb 5,20,80 \
 	    --storage-price '' --egress internet,direct --max-rounds 2 \
+	    --cache-dir results/decide_cache \
 	    --cross-check --quiet --json results/decide_demo.json
 
 lint:

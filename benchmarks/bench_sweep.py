@@ -34,6 +34,12 @@ break-even solves. ``sweep.decide.lane_fraction`` tracks refinement lane
 efficiency vs an equivalent-resolution dense grid and
 ``sweep.decide.displaced_tb`` the headline displaced-capacity figure.
 
+Part 6 is the persistent result cache (``repro.sim.cache``, ISSUE 6):
+the pricing grid swept cold (empty cache directory, every lane simulated
+and stored) and then warm through a *fresh* ``SweepDriver`` (every config
+served from disk, zero lanes simulated). ``sweep.cache.warm``'s derived
+column is the cold/warm wall-time ratio — the acceptance bar is >= 5x.
+
 Spawned pool workers are pinned to ``JAX_PLATFORMS=cpu`` by
 ``run_sweep``'s worker initializer, so the process rows cannot hang
 probing accelerator devices while this process holds them.
@@ -156,6 +162,44 @@ def _decide_rows(days: float, n_files: int, n_prices: int,
     ]
 
 
+def _cache_rows(days: float, n_files: int, n_prices: int) -> List[Dict]:
+    """``sweep.cache.{cold,warm}``: the pricing grid through a
+    tempdir-backed persistent result cache (ISSUE 6). Cold simulates and
+    stores every dynamics lane; warm drives a *fresh* ``SweepDriver``
+    (empty memo — only the on-disk store answers) and must simulate zero
+    lanes. ``sweep.cache.warm``'s derived column is the cold/warm speedup
+    (acceptance: >= 5x)."""
+    import shutil
+    import tempfile
+
+    specs = _pricing_grid(days, n_files, n_prices=n_prices, n_seeds=2)
+    tmp = tempfile.mkdtemp(prefix="bench_sweep_cache_")
+    try:
+        cold_drv = SweepDriver(backend="jax", tick=JAX_BENCH_TICK, cache=tmp)
+        t0 = time.perf_counter()
+        cold_drv.run(specs)
+        cold_wall = time.perf_counter() - t0
+        warm_drv = SweepDriver(backend="jax", tick=JAX_BENCH_TICK, cache=tmp)
+        t0 = time.perf_counter()
+        warm = warm_drv.run(specs)
+        warm_wall = time.perf_counter() - t0
+        if warm.lanes_simulated:
+            raise RuntimeError(
+                f"warm cache re-run simulated {warm.lanes_simulated} lanes "
+                "(expected 0) — the result cache is not serving")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    g = len(specs)
+    return [
+        {"name": f"sweep.cache.cold.{g}cfg",
+         "us_per_call": cold_wall / g * 1e6,
+         "derived": g / cold_wall if cold_wall > 0 else 0.0},
+        {"name": f"sweep.cache.warm.{g}cfg",
+         "us_per_call": warm_wall / g * 1e6,
+         "derived": cold_wall / warm_wall if warm_wall > 0 else 0.0},
+    ]
+
+
 def _workload_rows(days: float, n_files: int) -> List[Dict]:
     specs = expand_grid({"base": "III", "days": days, "n_files": n_files,
                          "cache_tb": 20.0, "workload": list(WORKLOAD_PANEL)})
@@ -234,6 +278,7 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
     rows += _workload_rows(jdays, jfiles)
     rows += _decide_rows(jdays, jfiles, n_prices=3 if fast else 9,
                          fast=fast)
+    rows += _cache_rows(jdays, jfiles, n_prices=3 if fast else 9)
     return rows
 
 

@@ -106,6 +106,15 @@ def main(argv=None) -> int:
                     help="disk-only baseline configuration (default I)")
     ap.add_argument("--z", type=float, default=1.96,
                     help="CI critical value (default 1.96 = 95%%)")
+    ap.add_argument("--cache-dir", default=os.environ.get("REPRO_CACHE_DIR"),
+                    metavar="DIR",
+                    help="persistent result-cache directory (default: "
+                         "$REPRO_CACHE_DIR if set, else no cache). Warm "
+                         "re-runs of the same grid simulate zero lanes — "
+                         "see docs/simulation.md, 'Result cache'")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the result cache even if --cache-dir or "
+                         "$REPRO_CACHE_DIR is set")
     ap.add_argument("--backend", default="jax",
                     choices=["jax", "process"])
     ap.add_argument("--tick", type=float, default=60.0,
@@ -138,8 +147,12 @@ def main(argv=None) -> int:
         print(f"error: {e}", file=sys.stderr)
         return 2
 
+    cache_dir = None if args.no_cache else args.cache_dir
     driver = SweepDriver(backend=args.backend, tick=args.tick,
-                         workers=args.workers, lane_chunk=args.lane_chunk)
+                         workers=args.workers, lane_chunk=args.lane_chunk,
+                         cache=cache_dir)
+    if cache_dir and not args.quiet:
+        print(f"decide: result cache at {cache_dir}", flush=True)
     if not args.quiet:
         n0 = len(axes["cache_tb"]) * len(axes.get("egress", [1])) * \
             max(len(axes.get("storage_price", [1])), 1) * args.seeds
@@ -166,13 +179,11 @@ def main(argv=None) -> int:
     except ValueError as e:  # bad ranges/axes surface as CLI usage errors
         print(f"error: {e}", file=sys.stderr)
         return 2
-    report.stats.update(
-        backend=args.backend,
-        sweep_calls=driver.sweep_calls,
-        configs_run=driver.configs_run,
-        lanes_simulated=driver.lanes_simulated,
-        sweep_wall_s=round(driver.wall_s, 2),
-    )
+    # decide() auto-fills the driver accounting (sweep_calls, configs_run,
+    # lanes_simulated, cache_hits, sweep_wall_s, cache hit/miss counters);
+    # record only the CLI-level context on top.
+    if cache_dir:
+        report.stats["cache_dir"] = cache_dir
 
     md = report.to_markdown()
     print(md)
@@ -210,8 +221,11 @@ def main(argv=None) -> int:
         if not args.quiet:
             print(f"cross-check: re-running {len(specs)} configs on "
                   f"backend={other} ...", flush=True)
+        # The cross-check reads through the same cache (keys are
+        # engine-fingerprinted, so the other backend's entries never
+        # collide with this run's) — a warm nightly re-check is free.
         ref = run_sweep(specs, backend=other, tick=args.tick,
-                        workers=args.workers)
+                        workers=args.workers, cache=cache_dir)
         mine = driver.run(specs)  # cached — no new simulation
         bad = []
         for a, b in zip(mine.results, ref.results):

@@ -140,6 +140,16 @@ def main(argv=None) -> int:
                          "unchunked run). Default: all lanes at once")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes (default: all CPUs)")
+    ap.add_argument("--cache-dir", default=os.environ.get("REPRO_CACHE_DIR"),
+                    metavar="DIR",
+                    help="persistent result-cache directory (default: "
+                         "$REPRO_CACHE_DIR if set, else no cache): "
+                         "already-simulated configurations are served "
+                         "from disk, only the rest are simulated "
+                         "(docs/simulation.md, 'Result cache')")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the result cache even if --cache-dir or "
+                         "$REPRO_CACHE_DIR is set")
     ap.add_argument("--out", default="", help="write the full table as CSV")
     ap.add_argument("--json", dest="json_out", default="",
                     help="write table + series digests as JSON")
@@ -191,15 +201,22 @@ def main(argv=None) -> int:
                   f"jobs={result.jobs_done:8.0f} cost=${result.cost_usd:12,.2f}",
                   flush=True)
 
+    cache_dir = None if args.no_cache else args.cache_dir
+    if cache_dir:
+        print(f"cache: {cache_dir}", flush=True)
     try:
         result = run_sweep(specs, workers=args.workers, progress=progress,
                            backend=args.backend, tick=args.tick,
-                           lane_chunk=args.lane_chunk)
+                           lane_chunk=args.lane_chunk, cache=cache_dir)
     except ValueError as e:  # e.g. non-uniform grid on the jax backend
         print(f"error: {e}", file=sys.stderr)
         return 2
     print(f"done in {result.wall_s:.1f}s "
           f"({result.configs_per_sec:.2f} configs/sec)")
+    if cache_dir:
+        print(f"cache: {result.cache_hits} of {len(result)} configs served "
+              f"from cache, {result.lanes_simulated} dynamics lane(s) "
+              "simulated")
 
     front = result.pareto_front()
     print(f"\nPareto front (min cost, max jobs) — {len(front)} of "

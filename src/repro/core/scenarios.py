@@ -15,7 +15,9 @@ distributions) is rebuilt deterministically inside each worker.
 
 from __future__ import annotations
 
+import hashlib
 import itertools
+import json
 import math
 from dataclasses import asdict, dataclass, fields, replace
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence
@@ -234,6 +236,57 @@ def dynamics_key(spec: ScenarioSpec) -> ScenarioSpec:
 def strip_seed(spec: ScenarioSpec) -> ScenarioSpec:
     """Canonical across-seed group identity (seed reset to 0)."""
     return replace(spec, seed=0)
+
+
+#: Version of the persisted result-entry schema (``repro.sim.cache``).
+#: Part of every cache key and stored inside every entry: bump it whenever
+#: the meaning of a stored payload changes — simulation dynamics, metric
+#: definitions, the monthly-totals billing contract — and every stale
+#: entry becomes unreachable (new keys) *and* rejected on direct reads
+#: (entry-side version check), forcing recomputation.
+RESULT_SCHEMA_VERSION = 1
+
+
+def engine_fingerprint(backend: str = "process",
+                       tick: Optional[float] = None) -> str:
+    """Canonical engine identity for result caching.
+
+    The event-driven reference engine is bit-deterministic per spec, so
+    ``"process"`` alone identifies it. The fixed-tick batched engine's
+    outputs depend on its clock step, so the tick value is part of the
+    fingerprint (``"jax:60"``); ``lane_chunk``/``devices`` are excluded —
+    chunked execution is bitwise identical to the unchunked run. The two
+    engines agree statistically, not bitwise, so their entries never
+    substitute for each other.
+    """
+    if backend == "process":
+        return "process"
+    if backend == "jax":
+        t = 10.0 if tick is None else float(tick)
+        return f"jax:{t:g}"
+    raise ValueError(f"unknown backend {backend!r} "
+                     "(expected 'process' or 'jax')")
+
+
+def cache_key(spec: ScenarioSpec, backend: str = "process",
+              tick: Optional[float] = None) -> str:
+    """Content address of a spec's *dynamics* result (sha256 hex digest).
+
+    The key hashes the canonical JSON of ``(schema version, engine
+    fingerprint, dynamics_key(spec))``: pricing-only fields (the
+    ``PRICING_FIELDS``) are reset first, so every pricing variant of one
+    simulated lane maps to the same entry and is re-billed at read time;
+    any dynamics-affecting field — seed included — lands on a different
+    key. Pure content hashing (no ``hash()``/``id()``) keeps the key
+    stable across process restarts and machines.
+    """
+    doc = {
+        "schema": RESULT_SCHEMA_VERSION,
+        "engine": engine_fingerprint(backend, tick),
+        "spec": asdict(dynamics_key(spec)),
+    }
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
 
 
 # --------------------------------------------------------------------------

@@ -676,6 +676,17 @@ def _lane_result(grid: "PackedGrid", out: dict, si: int,
     for i, bill in enumerate(bills):
         m[f"month{i+1}.storage_usd"] = bill.storage_usd
         m[f"month{i+1}.network_usd"] = bill.network_usd
+    # Raw monthly billing inputs (pricing-independent): exact float()
+    # images of the device aggregates, so re-billing them through
+    # ``bills_from_monthly_totals`` — the result cache's serve path —
+    # reproduces the bills above bit-exactly under any cost model.
+    monthly = {
+        "gb_seconds": [float(x) for x in out["gbsec_mo"][li]],
+        "egress_bytes": [float(x) for x in out["egress_mo"][li]],
+        "class_a": [float(x) for x in out["cls_a_mo"][li]],
+        "class_b": [float(x) for x in out["cls_b_mo"][li]],
+        "full_months": int(grid.full_months),
+    }
     return ScenarioResult(
         spec=spec,
         metrics=m,
@@ -684,6 +695,7 @@ def _lane_result(grid: "PackedGrid", out: dict, si: int,
         ops_usd=sum(b.ops_usd for b in bills),
         wall_s=wall_s,
         events=grid.n_ticks,
+        monthly=monthly,
     )
 
 

@@ -146,6 +146,17 @@ class GCSBucket(StorageElement):
         self.class_b_month: int = 0
         self._month_start: int = 0
         self.bills: List[MonthlyBill] = []
+        #: Raw per-month billing inputs, one tuple (gb_seconds,
+        #: egress_bytes, class_a, class_b) per closed month — the
+        #: pricing-independent quantities ``bills_from_monthly_totals``
+        #: turns back into ``self.bills`` under any cost model. The result
+        #: cache (``repro.sim.cache``) persists these so a cached dynamics
+        #: run can be re-billed for pricing variants bit-exactly.
+        self.monthly_raw: List[Tuple[float, float, int, int]] = []
+        #: Complete 30-day months closed by ``_sync`` (always billed);
+        #: a trailing ``monthly_raw`` entry beyond this count is the
+        #: partial month ``finalize`` closed because it saw activity.
+        self.full_months_closed: int = 0
         # increase/decrease tracking (paper: "storage increase/decrease
         # tracking") — (time, +/- bytes) deltas for Fig-8 style curves.
         self.volume_deltas: List[Tuple[int, float]] = []
@@ -156,12 +167,15 @@ class GCSBucket(StorageElement):
             boundary = self._month_start + MONTH_SECONDS
             self._gb_seconds_month += self.used / 1e9 * (boundary - self._last_sync)
             self._close_month()
+            self.full_months_closed += 1
             self._last_sync = boundary
             self._month_start = boundary
         self._gb_seconds_month += self.used / 1e9 * (now - self._last_sync)
         self._last_sync = now
 
     def _close_month(self) -> None:
+        self.monthly_raw.append((self._gb_seconds_month, self.egress_month,
+                                 self.class_a_month, self.class_b_month))
         cm = self.cost_model
         self.bills.append(
             MonthlyBill(

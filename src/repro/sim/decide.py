@@ -895,6 +895,23 @@ def decide(axes: Mapping[str, Any], evaluate: Evaluate, *,
 
     pool = {p.spec: p for p in ref.points + disp.probes}  # dedupe re-probes
     frontier = ci_frontier(list(pool.values()), cost_of)
-    return DecisionReport(baseline=base_point, refine=ref, frontier=frontier,
-                          chosen=chosen, displaced=disp, breakeven=breakeven,
-                          onprem=onprem, z=z)
+    report = DecisionReport(baseline=base_point, refine=ref,
+                            frontier=frontier, chosen=chosen, displaced=disp,
+                            breakeven=breakeven, onprem=onprem, z=z)
+    # Driver-like evaluators (``SweepDriver``) carry run accounting — fold
+    # it into the report so every caller (CLI, benches, tests) sees the
+    # same sweep_calls/configs_run/lanes_simulated/cache_hits books
+    # without re-plumbing them.
+    for attr in ("backend", "sweep_calls", "configs_run", "lanes_simulated",
+                 "cache_hits"):
+        value = getattr(evaluate, attr, None)
+        if isinstance(value, (int, str)) and not isinstance(value, bool):
+            report.stats[attr] = value
+    wall = getattr(evaluate, "wall_s", None)
+    if isinstance(wall, (int, float)):
+        report.stats["sweep_wall_s"] = round(float(wall), 2)
+    cache = getattr(evaluate, "cache", None)
+    cache_stats = getattr(cache, "stats", None)
+    if cache_stats is not None and hasattr(cache_stats, "as_dict"):
+        report.stats["cache"] = cache_stats.as_dict()
+    return report

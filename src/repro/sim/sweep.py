@@ -49,6 +49,14 @@ class ScenarioResult:
     wall_s: float
     events: int
     series: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    #: Raw per-month billing inputs: ``{"gb_seconds": [...], "egress_bytes":
+    #: [...], "class_a": [...], "class_b": [...], "full_months": int}``.
+    #: Pricing-independent — feeding them through
+    #: ``repro.sim.cloud.bills_from_monthly_totals`` under any cost model
+    #: re-bills the run bit-exactly, which is how the persistent result
+    #: cache (``repro.sim.cache``) serves pricing variants of one stored
+    #: dynamics lane. Empty for synthetic results that never simulated.
+    monthly: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def cost_usd(self) -> float:
@@ -121,6 +129,14 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
     wall = time.perf_counter() - t0
     bill = sum_bills(scenario.gcs.bills)
     series = {name: ts.summary() for name, ts in scenario.out.series.items()}
+    raw = scenario.gcs.monthly_raw
+    monthly = {
+        "gb_seconds": [float(r[0]) for r in raw],
+        "egress_bytes": [float(r[1]) for r in raw],
+        "class_a": [int(r[2]) for r in raw],
+        "class_b": [int(r[3]) for r in raw],
+        "full_months": int(scenario.gcs.full_months_closed),
+    }
     return ScenarioResult(
         spec=spec,
         metrics=metrics,
@@ -130,6 +146,7 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
         wall_s=wall,
         events=scenario.sim.events_executed,
         series=series,
+        monthly=monthly,
     )
 
 
@@ -159,6 +176,12 @@ class SweepResult:
 
     results: List[ScenarioResult]
     wall_s: float = 0.0
+    #: Distinct dynamics lanes actually *simulated* to answer this call
+    #: (``None`` when the call ran without get-or-compute accounting). A
+    #: fully warm cache read reports 0 here.
+    lanes_simulated: Optional[int] = None
+    #: Distinct requested specs answered from the persistent result cache.
+    cache_hits: int = 0
 
     def __len__(self) -> int:
         return len(self.results)
@@ -230,7 +253,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
               progress: Optional[Callable[[int, int, ScenarioResult], None]]
               = None, backend: str = "process",
               tick: float = 10.0, lane_chunk: Optional[int] = None,
-              devices: Optional[Sequence[Any]] = None) -> SweepResult:
+              devices: Optional[Sequence[Any]] = None,
+              cache: Optional[Any] = None) -> SweepResult:
     """Execute every spec; results keep the input order.
 
     ``backend`` selects the execution engine:
@@ -252,7 +276,36 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
     and one compile reused across chunks and grids — optionally round-
     robined over several devices. Per-lane results are bitwise identical
     to the unchunked path.
+
+    ``cache``: a ``repro.sim.cache.ResultCache`` (or a cache-directory
+    path) turns the call into get-or-compute: specs whose dynamics entry
+    is already stored are served from the cache (re-billed for their
+    pricing fields, bit-identical to a fresh run on the same engine),
+    only the misses are simulated, and their results are stored back.
+    ``SweepResult.lanes_simulated``/``cache_hits`` report the split.
     """
+    if cache is not None:
+        from repro.core.scenarios import dynamics_key
+        from repro.sim.cache import as_cache  # deferred: cache imports us
+
+        cache = as_cache(cache)
+        specs = list(specs)
+        t0 = time.perf_counter()
+        hits = cache.fetch(specs, backend=backend, tick=tick)
+        miss = [s for s in dict.fromkeys(specs) if s not in hits]
+        computed: Dict["ScenarioSpec", ScenarioResult] = {}
+        if miss:
+            res = run_sweep(miss, workers=workers, progress=progress,
+                            backend=backend, tick=tick,
+                            lane_chunk=lane_chunk, devices=devices)
+            computed = dict(zip(miss, res.results))
+            cache.store(computed.items(), backend=backend, tick=tick)
+        merged = {**hits, **computed}
+        return SweepResult(
+            results=[merged[s] for s in specs],
+            wall_s=time.perf_counter() - t0,
+            lanes_simulated=len({dynamics_key(s) for s in miss}),
+            cache_hits=len(hits))
     if backend == "jax":
         from repro.sim.batched import run_sweep_jax  # deferred: needs jax
 
@@ -305,14 +358,23 @@ class SweepDriver:
 
     It also keeps the books the decision layer reports on:
 
-    - ``lanes_simulated``: distinct dynamics lanes ever requested (the
+    - ``lanes_simulated``: distinct dynamics lanes ever *simulated* (the
       ``repro.core.scenarios.dynamics_key`` identity — the
       backend-independent lane-efficiency denominator). Note the memo is
-      per exact spec: pricing-only variants of a cached spec arriving in
-      a *later* call still re-simulate their lane (``pack_specs`` dedups
-      within one packed grid only), which is why the decide solvers batch
-      each round's pricing probes into one call;
-    - ``configs_run`` / ``sweep_calls`` / ``wall_s``: raw work counters.
+      per exact spec: pricing-only variants of a memoized spec arriving
+      in a *later* call still re-simulate their lane (``pack_specs``
+      dedups within one packed grid only) unless a persistent cache
+      serves them, which is why the decide solvers batch each round's
+      pricing probes into one call;
+    - ``configs_run`` / ``sweep_calls`` / ``wall_s``: raw work counters —
+      cache-served specs never count as work;
+    - ``cache_hits``: specs answered from the persistent result cache.
+
+    ``cache`` (a ``repro.sim.cache.ResultCache`` or a cache-directory
+    path) adds a persistent lookup tier between the in-memory memo and
+    the engines: memo -> cache -> simulate. Simulated results are stored
+    back, so a re-run of the same workflow — same process or next week's
+    CI job — answers entirely from disk (``lanes_simulated`` stays 0).
     """
 
     def __init__(self, backend: str = "jax", tick: float = 10.0,
@@ -320,17 +382,24 @@ class SweepDriver:
                  lane_chunk: Optional[int] = None,
                  devices: Optional[Sequence[Any]] = None,
                  progress: Optional[Callable[[int, int, ScenarioResult],
-                                             None]] = None):
+                                             None]] = None,
+                 cache: Optional[Any] = None):
         self.backend = backend
         self.tick = tick
         self.workers = workers
         self.lane_chunk = lane_chunk
         self.devices = devices
         self.progress = progress
-        self._cache: Dict["ScenarioSpec", ScenarioResult] = {}
+        if cache is not None:
+            from repro.sim.cache import as_cache  # deferred: imports us
+
+            cache = as_cache(cache)
+        self.cache = cache
+        self._memo: Dict["ScenarioSpec", ScenarioResult] = {}
         self._lane_keys: set = set()
         self.sweep_calls = 0
         self.configs_run = 0
+        self.cache_hits = 0
         self.wall_s = 0.0
 
     @property
@@ -345,8 +414,17 @@ class SweepDriver:
         from repro.core.scenarios import dynamics_key
 
         specs = list(specs)
-        new = [s for s in dict.fromkeys(specs) if s not in self._cache]
+        new = [s for s in dict.fromkeys(specs) if s not in self._memo]
         t0 = time.perf_counter()
+        hits = 0
+        if new and self.cache is not None:
+            served = self.cache.fetch(new, backend=self.backend,
+                                      tick=self.tick)
+            self._memo.update(served)
+            hits = len(served)
+            self.cache_hits += hits
+            new = [s for s in new if s not in served]
+        lanes_before = len(self._lane_keys)
         if new:
             res = run_sweep(new, workers=self.workers,
                             progress=self.progress, backend=self.backend,
@@ -356,7 +434,12 @@ class SweepDriver:
             self.configs_run += len(new)
             self.wall_s += res.wall_s
             for spec, result in zip(new, res.results):
-                self._cache[spec] = result
+                self._memo[spec] = result
                 self._lane_keys.add(dynamics_key(spec))
-        return SweepResult(results=[self._cache[s] for s in specs],
-                           wall_s=time.perf_counter() - t0)
+            if self.cache is not None:
+                self.cache.store(zip(new, res.results),
+                                 backend=self.backend, tick=self.tick)
+        return SweepResult(results=[self._memo[s] for s in specs],
+                           wall_s=time.perf_counter() - t0,
+                           lanes_simulated=len(self._lane_keys) - lanes_before,
+                           cache_hits=hits)

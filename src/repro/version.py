@@ -1,0 +1,13 @@
+"""Package version, recorded in cache provenance manifests.
+
+``repro`` is distributed as a source tree (no wheel metadata), so the
+version lives here instead of ``importlib.metadata``. Bump it when a
+release-worthy behaviour change lands; the result cache stores it in each
+entry's manifest (``repro.sim.cache``) so a cached result can always be
+traced back to the code generation that produced it. Note the cache *key*
+does not include this version — invalidation is driven by the explicit
+``repro.core.scenarios.RESULT_SCHEMA_VERSION``, which changes only when
+simulation outputs actually change meaning.
+"""
+
+__version__ = "0.6.0"

@@ -233,3 +233,90 @@ def test_refinement_never_drops_dense_frontier_point(jobs_tau, cost_tau,
     evaluated = {p.spec for p in res.points}
     refined_front = {p.spec for p in res.frontier}
     assert dense_front & evaluated <= refined_front
+
+
+# ---------------------------------------------------------------------------
+# Result-cache key semantics (ISSUE 6): the content address must be a pure
+# function of the dynamics identity — invariant under pricing-only changes,
+# distinct for any dynamics-affecting change. (Restart stability is covered
+# by a subprocess test in tests/test_cache.py.)
+# ---------------------------------------------------------------------------
+
+#: Valid value pools per ScenarioSpec field (chosen to satisfy
+#: ``__post_init__`` validation, not to be exhaustive).
+_SPEC_POOLS = {
+    "base": ["I", "II", "III"],
+    "days": [0.1, 0.25, 1.0, 2.0],
+    "n_files": [100, 1000, 20_000],
+    "seed": [0, 1, 2, 7],
+    "cache_tb": [None, 5.0, 20.0, 80.0],
+    "gcs_limit_tb": [None, 0.0, 50.0],
+    "egress": ["internet", "direct", "interconnect"],
+    "storage_price": [None, 0.018, 0.026],
+    "egress_price": [None, 0.0, 0.05],
+    "job_rate_scale": [0.5, 1.0, 2.0],
+    "workload": ["steady", "diurnal", "zipf-drift"],
+    "curves": [False, True],
+}
+
+_DYNAMICS_FIELDS = sorted(set(_SPEC_POOLS) -
+                          {"egress", "storage_price", "egress_price"})
+
+
+@st.composite
+def _spec_strategy(draw):
+    from repro.core.scenarios import ScenarioSpec
+
+    return ScenarioSpec(**{name: draw(st.sampled_from(pool))
+                           for name, pool in _SPEC_POOLS.items()})
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_cache_key_invariant_under_pricing_only_changes(data):
+    """Repricing any subset of the PRICING_FIELDS never moves the content
+    address: pricing variants share one stored dynamics lane."""
+    from dataclasses import replace
+
+    from repro.core.scenarios import PRICING_FIELDS, cache_key
+
+    spec = data.draw(_spec_strategy())
+    repriced = replace(spec, **{f: data.draw(st.sampled_from(_SPEC_POOLS[f]))
+                                for f in PRICING_FIELDS})
+    assert cache_key(repriced) == cache_key(spec)
+    assert cache_key(repriced, "jax", 60.0) == cache_key(spec, "jax", 60.0)
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_cache_key_collides_iff_dynamics_identical(data):
+    """Two independently drawn specs share a key exactly when their
+    dynamics identities coincide — no accidental collisions, no spurious
+    misses, for either engine fingerprint."""
+    from repro.core.scenarios import cache_key, dynamics_key
+
+    a, b = data.draw(_spec_strategy()), data.draw(_spec_strategy())
+    same_dynamics = dynamics_key(a) == dynamics_key(b)
+    assert (cache_key(a) == cache_key(b)) == same_dynamics
+    assert (cache_key(a, "jax", 60.0) == cache_key(b, "jax", 60.0)) \
+        == same_dynamics
+    # engines never collide with each other regardless of the spec pair
+    assert cache_key(a, "process") != cache_key(b, "jax", 60.0)
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_cache_key_sensitive_to_every_dynamics_field(data):
+    """Mutating any single dynamics-affecting field to a different valid
+    value always produces a fresh content address."""
+    from dataclasses import replace
+
+    from repro.core.scenarios import cache_key
+
+    spec = data.draw(_spec_strategy())
+    field = data.draw(st.sampled_from(_DYNAMICS_FIELDS))
+    alternatives = [v for v in _SPEC_POOLS[field]
+                    if v != getattr(spec, field)]
+    mutated = replace(spec, **{field: data.draw(st.sampled_from(alternatives))})
+    assert cache_key(mutated) != cache_key(spec), field
+    assert cache_key(mutated, "jax", 60.0) != cache_key(spec, "jax", 60.0)

@@ -28,6 +28,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.scenarios import EGRESS_OPTIONS, ScenarioSpec
+from repro.kernels.registry import TICK_IMPL_CHOICES
 from repro.sim.decide import OnPremDisk, decide
 from repro.sim.sweep import SweepDriver, run_sweep
 
@@ -118,7 +119,13 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="jax",
                     choices=["jax", "process"])
     ap.add_argument("--tick", type=float, default=60.0,
-                    help="jax-backend clock step, seconds (default 60)")
+                    help="jax-backend clock step, seconds (default 60); "
+                         "distinct from --tick-impl (kernel choice)")
+    ap.add_argument("--tick-impl", default="auto",
+                    choices=TICK_IMPL_CHOICES,
+                    help="jax-backend kernel implementation (auto = "
+                         "compiled Pallas on an accelerator, jnp on CPU; "
+                         "see docs/simulation.md, 'Kernel selection')")
     ap.add_argument("--lane-chunk", type=int, default=None)
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--cross-check", action="store_true",
@@ -147,10 +154,13 @@ def main(argv=None) -> int:
         print(f"error: {e}", file=sys.stderr)
         return 2
 
+    if args.tick_impl != "auto" and args.backend != "jax":
+        print("error: --tick-impl requires --backend jax", file=sys.stderr)
+        return 2
     cache_dir = None if args.no_cache else args.cache_dir
     driver = SweepDriver(backend=args.backend, tick=args.tick,
-                         workers=args.workers, lane_chunk=args.lane_chunk,
-                         cache=cache_dir)
+                         workers=args.workers, tick_impl=args.tick_impl,
+                         lane_chunk=args.lane_chunk, cache=cache_dir)
     if cache_dir and not args.quiet:
         print(f"decide: result cache at {cache_dir}", flush=True)
     if not args.quiet:
@@ -225,6 +235,7 @@ def main(argv=None) -> int:
         # engine-fingerprinted, so the other backend's entries never
         # collide with this run's) — a warm nightly re-check is free.
         ref = run_sweep(specs, backend=other, tick=args.tick,
+                        tick_impl=args.tick_impl if other == "jax" else "auto",
                         workers=args.workers, cache=cache_dir)
         mine = driver.run(specs)  # cached — no new simulation
         bad = []

@@ -35,6 +35,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.scenarios import EGRESS_OPTIONS, specs_from_mapping
+from repro.kernels.registry import TICK_IMPL_CHOICES
 from repro.sim.output import write_csv
 from repro.sim.sweep import run_sweep
 
@@ -131,7 +132,17 @@ def main(argv=None) -> int:
     ap.add_argument("--tick", type=float, default=10.0,
                     help="jax backend clock step in seconds (default 10, "
                          "the paper's generator interval; larger ticks "
-                         "trade temporal resolution for speed)")
+                         "trade temporal resolution for speed). Distinct "
+                         "from --tick-impl, which picks the kernel")
+    ap.add_argument("--tick-impl", default="auto",
+                    choices=TICK_IMPL_CHOICES,
+                    help="jax backend kernel implementation: jnp (the "
+                         "oracle program), pallas (compiled kernels; "
+                         "accelerator), pallas_interpret (kernels traced "
+                         "through the Pallas interpreter — parity/CI "
+                         "path, not a speed mode), or auto (default: "
+                         "pallas on an accelerator, jnp on CPU). See "
+                         "docs/simulation.md, 'Kernel selection'")
     ap.add_argument("--lane-chunk", type=int, default=None, metavar="N",
                     help="jax backend: simulate at most N dynamics lanes "
                          "per device dispatch (bounded memory for large "
@@ -184,11 +195,15 @@ def main(argv=None) -> int:
     if args.lane_chunk is not None and args.backend != "jax":
         print("error: --lane-chunk requires --backend jax", file=sys.stderr)
         return 2
+    if args.tick_impl != "auto" and args.backend != "jax":
+        print("error: --tick-impl requires --backend jax", file=sys.stderr)
+        return 2
     if args.backend == "jax":
         chunk = ("" if args.lane_chunk is None
                  else f", lane_chunk={args.lane_chunk}")
         print(f"sweep: {len(specs)} configs, backend=jax "
-              f"(tick={args.tick:g}s{chunk})", flush=True)
+              f"(tick={args.tick:g}s, tick_impl={args.tick_impl}{chunk})",
+              flush=True)
     else:
         workers = (min(len(specs), os.cpu_count() or 1)
                    if args.workers is None else args.workers)
@@ -207,6 +222,7 @@ def main(argv=None) -> int:
     try:
         result = run_sweep(specs, workers=args.workers, progress=progress,
                            backend=args.backend, tick=args.tick,
+                           tick_impl=args.tick_impl,
                            lane_chunk=args.lane_chunk, cache=cache_dir)
     except ValueError as e:  # e.g. non-uniform grid on the jax backend
         print(f"error: {e}", file=sys.stderr)

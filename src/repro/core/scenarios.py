@@ -248,7 +248,8 @@ RESULT_SCHEMA_VERSION = 1
 
 
 def engine_fingerprint(backend: str = "process",
-                       tick: Optional[float] = None) -> str:
+                       tick: Optional[float] = None,
+                       tick_impl: Optional[str] = None) -> str:
     """Canonical engine identity for result caching.
 
     The event-driven reference engine is bit-deterministic per spec, so
@@ -258,18 +259,39 @@ def engine_fingerprint(backend: str = "process",
     chunked execution is bitwise identical to the unchunked run. The two
     engines agree statistically, not bitwise, so their entries never
     substitute for each other.
+
+    ``tick_impl`` (jax backend only) is the *resolved* kernel
+    implementation (``repro.kernels.registry``): ``"jnp"`` (or ``None``)
+    keeps the legacy ``jax:<tick>`` fingerprint — the jnp program *is*
+    the pre-registry engine bit-for-bit, so its entries stay shared —
+    while the Pallas implementations append their name
+    (``"jax:60:pallas"``), because kernel results match the jnp oracle
+    statistically (blocked-cumsum admission ties, fused-multiply-add
+    rounding), not bitwise, and must never cross-serve. ``"auto"`` is
+    rejected here: resolve it per host *before* keying
+    (``resolve_tick_impl``), otherwise one key could name two different
+    programs on two machines.
     """
     if backend == "process":
         return "process"
     if backend == "jax":
         t = 10.0 if tick is None else float(tick)
-        return f"jax:{t:g}"
+        impl = "jnp" if tick_impl is None else str(tick_impl)
+        if impl == "jnp":
+            return f"jax:{t:g}"
+        if impl in ("pallas", "pallas_interpret"):
+            return f"jax:{t:g}:{impl}"
+        raise ValueError(
+            f"tick_impl {tick_impl!r} cannot be fingerprinted (expected "
+            "a resolved implementation: 'jnp', 'pallas' or "
+            "'pallas_interpret'; resolve 'auto' first)")
     raise ValueError(f"unknown backend {backend!r} "
                      "(expected 'process' or 'jax')")
 
 
 def cache_key(spec: ScenarioSpec, backend: str = "process",
-              tick: Optional[float] = None) -> str:
+              tick: Optional[float] = None,
+              tick_impl: Optional[str] = None) -> str:
     """Content address of a spec's *dynamics* result (sha256 hex digest).
 
     The key hashes the canonical JSON of ``(schema version, engine
@@ -282,7 +304,7 @@ def cache_key(spec: ScenarioSpec, backend: str = "process",
     """
     doc = {
         "schema": RESULT_SCHEMA_VERSION,
-        "engine": engine_fingerprint(backend, tick),
+        "engine": engine_fingerprint(backend, tick, tick_impl),
         "spec": asdict(dynamics_key(spec)),
     }
     blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))

@@ -5,10 +5,21 @@ explicit BlockSpec VMEM tiling, an ``ops.py`` jitted wrapper, and a
 ``ref.py`` pure-jnp oracle. On this CPU container kernels run in
 interpret mode (correctness); on TPU the same calls compile to Mosaic.
 
+Kernel selection is the ``tick_impl`` axis (``registry.py``): one name —
+``"jnp" | "pallas" | "pallas_interpret" | "auto"`` — threaded from
+``run_sweep``/``SweepDriver``/the CLIs down to the kernels, replacing
+the former per-function ``use_pallas``/``interpret`` booleans (kept one
+release as deprecated aliases).
+
 - ``carousel_update``: the paper's transfer-manager tick (its stated
   linear-scaling hot loop) vectorized for the MXU: per-link counts and
   table lookups become one-hot matmuls; transfers tile across VMEM
   blocks with sequential-grid accumulation.
+- ``lane_tick``: the batched sweep engine's fused tick — the carousel
+  transfer math + completion billing per site block, the shared-GCS
+  prefix-sum admission scan (refinement passes as a sequential grid
+  axis), and the K/W candidate-window prefix recurrences; lane-blocked
+  via ``vmap`` (the batch axis becomes a leading grid dimension).
 - ``flash_attention``: blocked online-softmax attention (128x128 MXU
   tiles, GQA-aware, causal + sliding-window masks).
 - ``mamba_scan``: chunked selective-scan; the carry persists in a VMEM

@@ -77,14 +77,23 @@ def update_kernel(link_id_ref, active_ref, done_ref, total_ref,
 
 
 def carousel_tick_pallas(link_id, active, done, total, bw, mode, dt,
-                         interpret: bool = True):
+                         interpret=None):
     """One transfer-manager tick over all transfers.
 
     link_id: [N] i32; active: [N] bool; done/total: [N] f32;
     bw: [M] f32 bytes/s; mode: [M] i32 (1 = per-transfer throughput,
     0 = shared bandwidth); dt: scalar seconds.
     Returns (new_done [N] f32, completed [N] bool, counts [M] f32).
+
+    ``interpret`` defaults to the registry's backend-aware resolution
+    (``repro.kernels.registry.default_interpret``): compiled on an
+    accelerator, interpret mode elsewhere — the previous hardcoded
+    ``True`` silently interpreted on TPU/GPU hosts too.
     """
+    if interpret is None:
+        from repro.kernels.registry import default_interpret
+
+        interpret = default_interpret()
     n = link_id.shape[0]
     m = bw.shape[0]
     pad = (-n) % TR_BLOCK

@@ -1,10 +1,16 @@
 """Jitted wrappers for the carousel tick kernel.
 
-``carousel_tick`` picks the Pallas kernel (interpret mode on CPU; compiled
-on TPU) or the jnp reference. ``simulate_ticks`` scans the tick over many
-steps — the fully vectorized tick engine (the accelerator-native
-equivalent of the paper's transfer-manager loop) used by the throughput
-benchmark.
+``carousel_tick`` executes one transfer-manager tick under the
+``tick_impl`` selection axis (``repro.kernels.registry``): ``"jnp"``
+runs the jnp reference, ``"pallas"`` the compiled kernel,
+``"pallas_interpret"`` the kernel in interpret mode, and ``"auto"``
+resolves per host (compiled on an accelerator, jnp on CPU — never
+silently interpret). The pre-registry ``use_pallas=``/``interpret=``
+booleans remain one release as deprecated aliases.
+
+``simulate_ticks`` scans the tick over many steps — the fully
+vectorized tick engine (the accelerator-native equivalent of the
+paper's transfer-manager loop) used by the throughput benchmark.
 """
 
 from __future__ import annotations
@@ -16,15 +22,45 @@ import jax.numpy as jnp
 
 from repro.kernels.carousel_update.carousel_update import carousel_tick_pallas
 from repro.kernels.carousel_update.ref import carousel_tick_ref
+from repro.kernels.registry import (
+    UNSET,
+    resolve_tick_impl,
+    tick_impl_from_use_pallas,
+)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def carousel_tick(link_id, active, done, total, bw, mode, dt,
-                  use_pallas: bool = True, interpret: bool = True):
-    if use_pallas:
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def _carousel_tick(link_id, active, done, total, bw, mode, dt,
+                   use_kernel: bool, interpret: bool):
+    if use_kernel:
         return carousel_tick_pallas(link_id, active, done, total, bw, mode,
                                     dt, interpret=interpret)
     return carousel_tick_ref(link_id, active, done, total, bw, mode, dt)
+
+
+def carousel_tick(link_id, active, done, total, bw, mode, dt,
+                  tick_impl: str = "auto", use_pallas=UNSET,
+                  interpret=UNSET):
+    """One transfer-manager tick; implementation selected by ``tick_impl``.
+
+    Deliberately a plain function around a jitted core so the
+    deprecation warning for the legacy ``use_pallas=``/``interpret=``
+    aliases fires on every call, not only at trace time. The aliases
+    override ``tick_impl`` when given (``use_pallas=True`` maps to the
+    kernel at this host's default interpret mode unless ``interpret=``
+    pins it) and will be removed next release.
+    """
+    if use_pallas is not UNSET or interpret is not UNSET:
+        mapped = tick_impl_from_use_pallas(
+            True if use_pallas is UNSET else use_pallas,
+            where="carousel_tick")
+        if mapped != "jnp" and interpret is not UNSET:
+            mapped = "pallas_interpret" if interpret else "pallas"
+        tick_impl = mapped
+    impl = resolve_tick_impl(tick_impl)
+    return _carousel_tick(link_id, active, done, total, bw, mode, dt,
+                          use_kernel=impl.use_kernel,
+                          interpret=impl.interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("n_ticks",))

@@ -1,0 +1,144 @@
+"""Kernel-selection registry: the ``tick_impl`` axis.
+
+One name — ``"jnp" | "pallas" | "pallas_interpret" | "auto"`` — selects
+how the batched tick engine (``repro.sim.batched``) and the carousel
+tick wrapper (``repro.kernels.carousel_update.ops``) execute their hot
+loop, replacing the scattered ``use_pallas``/``interpret`` booleans that
+previously leaked through ``simulate_packed``/``run_sweep_jax``/
+``carousel_tick``:
+
+- ``"jnp"``: the pure-``jax.numpy`` program — the numerical oracle and
+  the CPU fast path (scatter-free one-hot formulation; see
+  ``repro.sim.batched``). Bitwise identical to the pre-registry default,
+  so its cache fingerprint stays the legacy ``jax:<tick>`` key.
+- ``"pallas"``: the fused lane-tick Pallas kernels
+  (``repro.kernels.lane_tick``) compiled for the local accelerator
+  (Mosaic on TPU, Triton on GPU). Requires an accelerator backend.
+- ``"pallas_interpret"``: the same kernels in Pallas interpret mode —
+  traced to regular XLA ops, so they run (slowly) on any backend. This
+  is the CI-runnable parity path, not a performance mode.
+- ``"auto"``: resolve per host — ``"pallas"`` when
+  ``jax.default_backend()`` is an accelerator, else ``"jnp"``. ``auto``
+  never silently selects interpret mode: pinning ``JAX_PLATFORMS=cpu``
+  on an accelerator host makes ``jax.default_backend()`` report ``cpu``
+  and resolution lands on ``"jnp"``, and an unpinned accelerator host
+  gets the compiled kernel or a loud compile error — never a 100x-slow
+  interpret run.
+
+Naming note: ``tick_impl`` selects the *kernel implementation*; the
+neighbouring ``tick=`` float on ``run_sweep``/``SweepDriver``/the CLIs
+is the *clock step duration in seconds*. The two axes are independent
+(``--tick 60 --tick-impl pallas_interpret`` is a coarse-clock interpret
+run).
+
+``jax`` is imported lazily — resolving a concrete name ("jnp",
+"pallas", "pallas_interpret") never touches jax, so jax-free flows
+(the process backend, cache keying of concrete impls) stay jax-free.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+#: Sentinel for "caller did not pass the deprecated parameter" — distinct
+#: from ``None``, which was itself a meaningful legacy value
+#: (``use_pallas=None`` meant per-backend auto-detection).
+UNSET = object()
+
+
+@dataclass(frozen=True)
+class TickImpl:
+    """One resolved tick-engine implementation.
+
+    ``use_kernel`` — run the fused Pallas kernels instead of the jnp
+    program; ``interpret`` — trace those kernels in Pallas interpret
+    mode rather than compiling them for the accelerator.
+    """
+
+    name: str
+    use_kernel: bool
+    interpret: bool
+
+
+TICK_IMPLS = {
+    "jnp": TickImpl("jnp", use_kernel=False, interpret=False),
+    "pallas": TickImpl("pallas", use_kernel=True, interpret=False),
+    "pallas_interpret": TickImpl("pallas_interpret", use_kernel=True,
+                                 interpret=True),
+}
+
+#: Valid ``tick_impl=`` / ``--tick-impl`` values, resolution aliases
+#: included (CLI ``choices=`` uses this tuple).
+TICK_IMPL_CHOICES: Tuple[str, ...] = ("auto",) + tuple(TICK_IMPLS)
+
+
+def _platform() -> str:
+    """The active JAX backend platform (monkeypatch point for tests)."""
+    import jax
+
+    return jax.default_backend()
+
+
+def on_accelerator() -> bool:
+    """True when the default JAX backend is an accelerator (tpu/gpu)."""
+    return _platform() in ("tpu", "gpu")
+
+
+def default_tick_impl() -> str:
+    """Resolve ``"auto"`` for this host: compiled Pallas on an
+    accelerator, the jnp program on CPU (never interpret mode)."""
+    return "pallas" if on_accelerator() else "jnp"
+
+
+def default_interpret() -> bool:
+    """Backend-aware interpret default for bare kernel calls: compile on
+    an accelerator, interpret elsewhere (the only way the kernel runs on
+    CPU). Kernel entry points (``carousel_tick_pallas``, the
+    ``lane_tick`` wrappers) use this when ``interpret`` is not given."""
+    return not on_accelerator()
+
+
+def resolve_tick_impl(name: Optional[str] = "auto") -> TickImpl:
+    """Resolve a ``tick_impl`` name to its :class:`TickImpl` record.
+
+    ``"auto"`` (or ``None``) resolves per host via
+    :func:`default_tick_impl`; concrete names resolve without importing
+    jax. Unknown names raise ``ValueError``.
+    """
+    if name is None:
+        name = "auto"
+    if isinstance(name, TickImpl):
+        return name
+    if name == "auto":
+        name = default_tick_impl()
+    try:
+        return TICK_IMPLS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown tick_impl {name!r} "
+            f"(expected one of {', '.join(TICK_IMPL_CHOICES)})") from None
+
+
+def tick_impl_from_use_pallas(use_pallas, *, where: str,
+                              stacklevel: int = 3) -> str:
+    """Map a legacy ``use_pallas=`` value to a ``tick_impl`` name,
+    emitting the one-release ``DeprecationWarning``.
+
+    Mapping preserves the literal old behavior: ``True`` ran the Pallas
+    kernel in interpret mode on CPU and compiled on an accelerator;
+    ``False`` ran the jnp program; ``None`` auto-detected per backend.
+    """
+    if use_pallas is None:
+        mapped = "auto"
+    elif use_pallas:
+        mapped = "pallas" if on_accelerator() else "pallas_interpret"
+    else:
+        mapped = "jnp"
+    warnings.warn(
+        f"{where}: use_pallas= is deprecated; pass "
+        f"tick_impl={mapped!r} instead (use_pallas={use_pallas!r} maps "
+        f"to it on this host). The alias will be removed next release.",
+        DeprecationWarning, stacklevel=stacklevel)
+    return mapped

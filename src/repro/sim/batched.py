@@ -5,9 +5,15 @@ per Python interpreter; the §5.3 decision workflow wants *grids* of
 scenarios. This module runs an entire packed grid as **one** ``jit`` +
 ``vmap`` JAX program: lane ``l`` is one ``ScenarioSpec``, every lane steps
 a shared fixed-tick clock, and per-lane transfer/link state advances
-through the ``repro.kernels.carousel_update`` tick math (the Pallas
-kernel on TPU; a scatter-free one-hot formulation of the same math on
-CPU). The paper's billing quantities — GCS
+through the carousel tick math — either the scatter-free one-hot jnp
+formulation (``tick_impl="jnp"``, the numerical oracle and CPU fast
+path) or the fused lane-blocked Pallas kernels
+(``repro.kernels.lane_tick``; ``tick_impl="pallas"`` compiled on an
+accelerator, ``"pallas_interpret"`` as the CI-runnable parity path).
+The implementation axis is the ``tick_impl`` registry
+(``repro.kernels.registry``; ``"auto"`` resolves per host) threaded
+down from ``run_sweep``/``SweepDriver``. The paper's billing
+quantities — GCS
 byte-seconds, tiered egress volume, class A/B operation counts — are
 accumulated on device per 30-day month bucket and folded into the
 existing ``GCSCostModel`` / ``MonthlyBill`` machinery on the way out, so
@@ -65,7 +71,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.carousel_update.carousel_update import carousel_tick_pallas
+from repro.kernels import lane_tick
+from repro.kernels.registry import (
+    UNSET,
+    TickImpl,
+    resolve_tick_impl,
+    tick_impl_from_use_pallas,
+)
 from repro.sim.cloud import bills_from_monthly_totals
 from repro.sim.sweep import ScenarioResult, SweepResult
 
@@ -99,9 +111,9 @@ _NEG_INF = jnp.float32(-jnp.inf)
 _BIG_TICKET = jnp.int32(2 ** 30)
 
 
-def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
+def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl):
     """Build the per-lane tick body and post-scan reduction (closures over
-    the static dimensions).
+    the static dimensions and the resolved tick implementation).
 
     Vectorization notes: the per-tick candidate sets (this tick's job
     arrivals, the waiting-queue window) are tiny, so their sequential
@@ -126,7 +138,15 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
     A file has no consumers iff ``pend_cnt == 0`` and ``fin_max <= now`` —
     exactly the condition the previous per-tick segment-sum over the whole
     [S, J] job table computed, at a fraction of the cost.
+
+    When ``impl.use_kernel`` the transfer advance (+ its completion
+    billing), the shared-GCS admission scan (+ the GB-second storage
+    integration) and the K/W candidate-window recurrences run as the
+    fused ``repro.kernels.lane_tick`` Pallas kernels; the surrounding
+    scatter/bookkeeping program is shared between implementations.
     """
+    use_kernel = impl.use_kernel
+    interpret = impl.interpret
 
     def tick_fn(state, xs, const):
         now, dt, month, t, jobs_now = xs
@@ -143,25 +163,26 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         # are excluded — their scatters land at the end of the tick).
         no_cons = (st["pend_cnt"] == 0) & (st["fin_max"] <= now)
 
-        # -- advance transfers one tick (the carousel tick math; Pallas
-        # kernel on TPU). A file only ever transfers on its own site's
-        # three links (link id = 3*site + type), so the CPU path computes
-        # the per-link active counts as a one-hot reduction over the
-        # link-type axis — integer-valued f32 sums, bitwise identical to
-        # the kernel's segment-sum, but with no scatter (XLA:CPU expands
-        # scatters into O(S·F)-trip sequential loops that dominated the
-        # tick before this formulation).
+        # -- advance transfers one tick (the carousel tick math). A file
+        # only ever transfers on its own site's three links (link id =
+        # 3*site + type), so the per-link active counts are a one-hot
+        # reduction over the link-type axis with no scatter (XLA:CPU
+        # expands scatters into O(S·F)-trip sequential loops that
+        # dominated the tick before this formulation). The kernel path
+        # fuses the same math with the completion billing below in one
+        # per-site Pallas block (``lane_tick.transfer_tick``).
         now_prev = now - dt
         t_active = st["tr_slot"] & (st["tr_start"] <= now_prev + 0.5)
         ltype = st["tr_link"] % 3  # 0 tape->disk, 1 gcs->disk, 2 disk->gcs
         loc_onehot = ltype[:, :, None] == jnp.arange(3, dtype=jnp.int32)
-        if use_pallas:
-            new_done, completed, _ = carousel_tick_pallas(
-                st["tr_link"].reshape(-1), t_active.reshape(-1),
-                st["tr_done"].reshape(-1), st["tr_total"].reshape(-1),
-                bw, mode, dt)
-            comp = completed.reshape(S, F)
-            new_done = new_done.reshape(S, F)
+        if use_kernel:
+            month_onehot = (jnp.arange(n_months, dtype=jnp.int32)
+                            == month).astype(jnp.float32)
+            (new_done, comp_f, tape_add, recall_add, mig_add,
+             egress_add, cls_a_add, cls_b_add) = lane_tick.transfer_tick(
+                st["tr_link"], t_active, st["tr_done"], st["tr_total"],
+                sizes, bw, mode, dt, month_onehot, interpret=interpret)
+            comp = comp_f > 0.5
         else:
             act_f = t_active.astype(jnp.float32)
             counts = jnp.sum(act_f[:, :, None] * loc_onehot,
@@ -178,16 +199,24 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         inbound = comp_tape | comp_recall
 
         st["disk_state"] = jnp.where(inbound, PRESENT, st["disk_state"])
-        st["tape_b"] += jnp.sum(sizes * comp_tape, axis=1)
-        st["gcsdisk_b"] += jnp.sum(sizes * comp_recall, axis=1)
-        recall_bytes = jnp.sum(sizes * comp_recall)
-        st["egress_mo"] = st["egress_mo"].at[month].add(recall_bytes)
-        st["cls_b_mo"] = st["cls_b_mo"].at[month].add(
-            jnp.sum(comp_recall).astype(jnp.float32))
         st["gcs_state"] = jnp.where(comp_mig, PRESENT, st["gcs_state"])
-        st["diskgcs_b"] += jnp.sum(sizes * comp_mig, axis=1)
-        st["cls_a_mo"] = st["cls_a_mo"].at[month].add(
-            jnp.sum(comp_mig).astype(jnp.float32))
+        if use_kernel:  # billing deltas came fused out of the kernel
+            st["tape_b"] += tape_add
+            st["gcsdisk_b"] += recall_add
+            st["diskgcs_b"] += mig_add
+            st["egress_mo"] += egress_add
+            st["cls_a_mo"] += cls_a_add
+            st["cls_b_mo"] += cls_b_add
+        else:
+            st["tape_b"] += jnp.sum(sizes * comp_tape, axis=1)
+            st["gcsdisk_b"] += jnp.sum(sizes * comp_recall, axis=1)
+            recall_bytes = jnp.sum(sizes * comp_recall)
+            st["egress_mo"] = st["egress_mo"].at[month].add(recall_bytes)
+            st["cls_b_mo"] = st["cls_b_mo"].at[month].add(
+                jnp.sum(comp_recall).astype(jnp.float32))
+            st["diskgcs_b"] += jnp.sum(sizes * comp_mig, axis=1)
+            st["cls_a_mo"] = st["cls_a_mo"].at[month].add(
+                jnp.sum(comp_mig).astype(jnp.float32))
         # migrated with no remaining consumer: drop the hot copy now
         drop_hot = comp_mig & no_cons & (st["disk_state"] == PRESENT)
         st["disk_used"] -= jnp.sum(sizes * drop_hot, axis=1)
@@ -242,18 +271,30 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         # site-major flattened candidate vector (one cumsum covers every
         # site; earlier candidates' admissions are visible to later ones),
         # refined over a few passes so a too-big blocker does not head-
-        # block the fitting candidates behind it.
-        want_flat = want_mig.reshape(-1)
-        sizes_flat = sizes.reshape(-1)
-        admitted_flat = jnp.zeros((S * F,), bool)
-        gcs_used = st["gcs_used"]
-        for _ in range(GCS_ADMIT_PASSES):
-            rem = want_flat & ~admitted_flat
-            csum = jnp.cumsum(sizes_flat * rem)
-            new = rem & (gcs_used + csum <= gcs_limit)
-            gcs_used = gcs_used + jnp.sum(sizes_flat * new)
-            admitted_flat = admitted_flat | new
-        mig = admitted_flat.reshape(S, F)
+        # block the fitting candidates behind it. The kernel path runs
+        # the passes as a sequential Pallas grid axis with the byte
+        # totals carried across site blocks, fusing the end-of-tick
+        # GB-second integration; its blocked cumsum reassociates the
+        # float totals, so admission matches the jnp program
+        # statistically (capacity-boundary ties), not bitwise.
+        if use_kernel:
+            mig_f, gcs_used, gbsec_add = lane_tick.gcs_admit(
+                want_mig, sizes, st["gcs_used"], gcs_limit, dt,
+                month_onehot, n_passes=GCS_ADMIT_PASSES,
+                interpret=interpret)
+            mig = mig_f > 0.5
+        else:
+            want_flat = want_mig.reshape(-1)
+            sizes_flat = sizes.reshape(-1)
+            admitted_flat = jnp.zeros((S * F,), bool)
+            gcs_used = st["gcs_used"]
+            for _ in range(GCS_ADMIT_PASSES):
+                rem = want_flat & ~admitted_flat
+                csum = jnp.cumsum(sizes_flat * rem)
+                new = rem & (gcs_used + csum <= gcs_limit)
+                gcs_used = gcs_used + jnp.sum(sizes_flat * new)
+                admitted_flat = admitted_flat | new
+            mig = admitted_flat.reshape(S, F)
         st["gcs_used"] = gcs_used
         st["gcs_state"] = jnp.where(mig, IN_FLIGHT, gs)
         st["disk_used"] -= jnp.sum(sizes * delete, axis=1)
@@ -356,15 +397,21 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
             ww = jnp.take_along_axis(st["wq_wait"], fids, axis=1)
             tailw = jnp.take_along_axis(job_tail, jid, axis=1)
             absent = first & (ds == ABSENT)
-            started_cols = []
-            extra = jnp.zeros((S,), jnp.float32)
-            for k in range(K):  # prefix recurrence over the window; all
-                fit = st["disk_used"] + extra + size[:, k] \
-                    <= disk_limit       # sites advance together
-                st_k = absent[:, k] & fit
-                started_cols.append(st_k)
-                extra = extra + jnp.where(st_k, size[:, k], 0.0)
-            started = jnp.stack(started_cols, axis=1)  # [S, K]
+            if use_kernel:
+                started_f, extra = lane_tick.window_admit(
+                    absent, size, st["disk_used"], disk_limit,
+                    fifo=False, interpret=interpret)
+                started = started_f > 0.5
+            else:
+                started_cols = []
+                extra = jnp.zeros((S,), jnp.float32)
+                for k in range(K):  # prefix recurrence over the window;
+                    fit = st["disk_used"] + extra + size[:, k] \
+                        <= disk_limit   # all sites advance together
+                    st_k = absent[:, k] & fit
+                    started_cols.append(st_k)
+                    extra = extra + jnp.where(st_k, size[:, k], 0.0)
+                started = jnp.stack(started_cols, axis=1)  # [S, K]
             st["disk_used"] = st["disk_used"] + extra
             to_wait = absent & ~started & ~ww
             wrank = jnp.cumsum(to_wait.astype(jnp.int32), axis=1) - 1
@@ -402,17 +449,23 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
         ds = jnp.take_along_axis(st["disk_state"], idx, axis=1)
         stale = validw & ((ds != ABSENT) | jumped)
         size = jnp.take_along_axis(sizes, idx, axis=1)
-        adm_cols = []
-        extra = jnp.zeros((S,), jnp.float32)
-        blocked = jnp.zeros((S,), bool)
-        for k in range(W):  # FIFO prefix recurrence, all sites together
-            fit = st["disk_used"] + extra + size[:, k] <= disk_limit
-            live = validw[:, k] & ~stale[:, k]
-            adm = live & fit & ~blocked
-            blocked = blocked | (live & ~fit)
-            adm_cols.append(adm)
-            extra = extra + jnp.where(adm, size[:, k], 0.0)
-        admitted = jnp.stack(adm_cols, axis=1)  # [S, W]
+        if use_kernel:
+            admitted_f, extra = lane_tick.window_admit(
+                validw & ~stale, size, st["disk_used"], disk_limit,
+                fifo=True, interpret=interpret)
+            admitted = admitted_f > 0.5
+        else:
+            adm_cols = []
+            extra = jnp.zeros((S,), jnp.float32)
+            blocked = jnp.zeros((S,), bool)
+            for k in range(W):  # FIFO prefix recurrence, sites together
+                fit = st["disk_used"] + extra + size[:, k] <= disk_limit
+                live = validw[:, k] & ~stale[:, k]
+                adm = live & fit & ~blocked
+                blocked = blocked | (live & ~fit)
+                adm_cols.append(adm)
+                extra = extra + jnp.where(adm, size[:, k], 0.0)
+            admitted = jnp.stack(adm_cols, axis=1)  # [S, W]
         st["disk_used"] = st["disk_used"] + extra
         occ3, plan = plan_links(idx, admitted, occ3)
         plan["stale"] = stale
@@ -489,8 +542,13 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
             flat("fin_max", lambda a: a.at[rows1].max(fin_val))
 
         # -- integrate stored cloud volume (GB-seconds) per month ---------
-        st["gbsec_mo"] = st["gbsec_mo"].at[month].add(
-            st["gcs_used"] / 1e9 * dt)
+        # (kernel path: fused into ``gcs_admit`` above — ``gcs_used`` is
+        # final for the tick once admission has run)
+        if use_kernel:
+            st["gbsec_mo"] += gbsec_add
+        else:
+            st["gbsec_mo"] = st["gbsec_mo"].at[month].add(
+                st["gcs_used"] / 1e9 * dt)
         return st, None
 
     def post_fn(st, lane, horizon):
@@ -519,12 +577,13 @@ def _lane_step_fns(S: int, K: int, n_months: int, use_pallas: bool):
 
 
 @functools.lru_cache(maxsize=16)
-def _grid_program(S: int, K: int, n_months: int, use_pallas: bool):
-    """The jitted lane-vmapped simulation (cached per static shape family;
-    XLA additionally retraces per concrete array shape — ``pack_specs``'s
-    K/J power-of-two bucketing and ``lane_chunk`` keep those shapes
-    stable across grids)."""
-    tick_fn, post_fn = _lane_step_fns(S, K, n_months, use_pallas)
+def _grid_program(S: int, K: int, n_months: int, impl_name: str):
+    """The jitted lane-vmapped simulation (cached per static shape family
+    and concrete ``tick_impl`` name; XLA additionally retraces per
+    concrete array shape — ``pack_specs``'s K/J power-of-two bucketing
+    and ``lane_chunk`` keep those shapes stable across grids)."""
+    tick_fn, post_fn = _lane_step_fns(S, K, n_months,
+                                      resolve_tick_impl(impl_name))
 
     def lane_sim(times, dts, month_idx, t_idx, horizon,
                  disk_limit, gcs_enabled, gcs_limit, min_pop,
@@ -586,11 +645,17 @@ _LANE_FIELDS = ("disk_limit", "gcs_enabled", "gcs_limit", "min_migrate_pop",
                 "job_submit_time", "job_tail", "jobs_per_tick")
 
 
-def simulate_packed(grid: "PackedGrid", use_pallas: Optional[bool] = None,
+def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
                     lane_chunk: Optional[int] = None,
-                    devices: Optional[Sequence] = None):
+                    devices: Optional[Sequence] = None,
+                    use_pallas=UNSET):
     """Run a packed grid on device; returns the raw per-lane aggregate dict
     (numpy arrays, lane-leading).
+
+    ``tick_impl`` selects the tick-engine implementation
+    (``repro.kernels.registry``): ``"jnp"`` | ``"pallas"`` |
+    ``"pallas_interpret"`` | ``"auto"`` (compiled Pallas on an
+    accelerator, jnp on CPU — never silently interpret mode).
 
     ``lane_chunk`` bounds device memory: lanes execute in fixed-size
     chunks (the last chunk padded by replicating its final lane; padded
@@ -598,9 +663,14 @@ def simulate_packed(grid: "PackedGrid", use_pallas: Optional[bool] = None,
     Per-lane results are bitwise identical to the unchunked path — lanes
     never interact. ``devices`` (default: all local devices) receives the
     chunks round-robin when more than one is present.
+
+    ``use_pallas=`` is a deprecated alias for ``tick_impl`` (one release,
+    ``DeprecationWarning``); it overrides ``tick_impl`` when given.
     """
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas is not UNSET:
+        tick_impl = tick_impl_from_use_pallas(
+            use_pallas, where="simulate_packed")
+    impl = resolve_tick_impl(tick_impl)
     if lane_chunk is not None and lane_chunk <= 0:
         raise ValueError(f"lane_chunk must be > 0, got {lane_chunk!r}")
     devices = list(devices) if devices is not None else jax.local_devices()
@@ -611,7 +681,7 @@ def simulate_packed(grid: "PackedGrid", use_pallas: Optional[bool] = None,
         lane_chunk = -(-L // len(devices))  # spread one chunk per device
 
     program = _grid_program(len(grid.site_names), grid.max_jobs_per_tick,
-                            grid.n_months, bool(use_pallas))
+                            grid.n_months, impl.name)
     T = grid.n_ticks
     shared = (np.asarray(grid.times), np.asarray(grid.dts),
               np.asarray(grid.month_idx), np.arange(T, dtype=np.int32),
@@ -701,9 +771,10 @@ def _lane_result(grid: "PackedGrid", out: dict, si: int,
 
 def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
                   progress: Optional[Callable] = None,
-                  use_pallas: Optional[bool] = None,
+                  tick_impl: str = "auto",
                   lane_chunk: Optional[int] = None,
-                  devices: Optional[Sequence] = None) -> SweepResult:
+                  devices: Optional[Sequence] = None,
+                  use_pallas=UNSET) -> SweepResult:
     """Execute a spec grid as one batched on-device program.
 
     Returns a ``SweepResult`` interchangeable with the process backend's
@@ -712,14 +783,22 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
     differ only in pricing (egress option, storage price) share one
     simulated dynamics lane and are billed separately.
 
+    ``tick`` is the clock-step *duration* in seconds; ``tick_impl``
+    selects the kernel *implementation* (see ``simulate_packed`` /
+    ``repro.kernels.registry``) — independent axes despite the shared
+    prefix. ``use_pallas=`` is the deprecated alias for ``tick_impl``.
+
     ``lane_chunk``/``devices``: see ``simulate_packed`` — bounded-memory
     chunked execution with optional multi-device round-robin.
     """
     from repro.core.scenarios import pack_specs
 
+    if use_pallas is not UNSET:
+        tick_impl = tick_impl_from_use_pallas(
+            use_pallas, where="run_sweep_jax")
     t0 = time.perf_counter()
     grid = pack_specs(specs, tick=tick)
-    out = simulate_packed(grid, use_pallas=use_pallas,
+    out = simulate_packed(grid, tick_impl=tick_impl,
                           lane_chunk=lane_chunk, devices=devices)
     wall = time.perf_counter() - t0
     results: List[ScenarioResult] = []

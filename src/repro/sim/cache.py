@@ -279,11 +279,19 @@ class ResultCache:
 
     # -- single-entry interface ---------------------------------------------
     def get(self, spec: "ScenarioSpec", backend: str = "process",
-            tick: Optional[float] = None) -> Optional[ScenarioResult]:
-        """The spec's result served from the store, or ``None`` (miss)."""
+            tick: Optional[float] = None,
+            tick_impl: Optional[str] = None) -> Optional[ScenarioResult]:
+        """The spec's result served from the store, or ``None`` (miss).
+
+        ``tick_impl`` (jax backend only) must be a *resolved* kernel
+        implementation name; it is part of the key, so entries from
+        different implementations never cross-serve (``"jnp"``/``None``
+        share the legacy key — see ``engine_fingerprint``).
+        """
         from repro.core.scenarios import cache_key
 
-        key = cache_key(spec, backend=backend, tick=tick)
+        key = cache_key(spec, backend=backend, tick=tick,
+                        tick_impl=tick_impl)
         data = self.backend.read(entry_name(key))
         if data is None:
             self.stats.misses += 1
@@ -303,7 +311,8 @@ class ResultCache:
         return result
 
     def put(self, spec: "ScenarioSpec", result: ScenarioResult,
-            backend: str = "process", tick: Optional[float] = None) -> bool:
+            backend: str = "process", tick: Optional[float] = None,
+            tick_impl: Optional[str] = None) -> bool:
         """Store a result's dynamics payload under the spec's key.
 
         Returns ``False`` (and stores nothing) for results without raw
@@ -314,24 +323,28 @@ class ResultCache:
 
         if not result.monthly:
             return False
-        key = cache_key(spec, backend=backend, tick=tick)
-        self._write_entry(key, spec, result, backend, tick)
+        key = cache_key(spec, backend=backend, tick=tick,
+                        tick_impl=tick_impl)
+        self._write_entry(key, spec, result, backend, tick, tick_impl)
         return True
 
     # -- batch interface (what run_sweep/SweepDriver call) ------------------
     def fetch(self, specs: Iterable["ScenarioSpec"],
-              backend: str = "process", tick: Optional[float] = None
+              backend: str = "process", tick: Optional[float] = None,
+              tick_impl: Optional[str] = None
               ) -> Dict["ScenarioSpec", ScenarioResult]:
         """Served results for every spec with a stored entry (hits only)."""
         out: Dict["ScenarioSpec", ScenarioResult] = {}
         for spec in dict.fromkeys(specs):
-            result = self.get(spec, backend=backend, tick=tick)
+            result = self.get(spec, backend=backend, tick=tick,
+                              tick_impl=tick_impl)
             if result is not None:
                 out[spec] = result
         return out
 
     def store(self, pairs: Iterable[Tuple["ScenarioSpec", ScenarioResult]],
-              backend: str = "process", tick: Optional[float] = None) -> int:
+              backend: str = "process", tick: Optional[float] = None,
+              tick_impl: Optional[str] = None) -> int:
         """Store a batch of (spec, result) pairs; one write per distinct
         key (pricing variants of a lane collapse to one entry). Returns
         the number of entries written."""
@@ -342,18 +355,20 @@ class ResultCache:
         for spec, result in pairs:
             if not result.monthly:
                 continue
-            key = cache_key(spec, backend=backend, tick=tick)
+            key = cache_key(spec, backend=backend, tick=tick,
+                            tick_impl=tick_impl)
             if key in done:
                 continue
             done.add(key)
-            self._write_entry(key, spec, result, backend, tick)
+            self._write_entry(key, spec, result, backend, tick, tick_impl)
             written += 1
         return written
 
     # -- entry codec --------------------------------------------------------
     def _write_entry(self, key: str, spec: "ScenarioSpec",
                      result: ScenarioResult, backend: str,
-                     tick: Optional[float]) -> None:
+                     tick: Optional[float],
+                     tick_impl: Optional[str] = None) -> None:
         from repro.core.scenarios import (RESULT_SCHEMA_VERSION,
                                           dynamics_key, engine_fingerprint)
 
@@ -362,10 +377,12 @@ class ResultCache:
             "key": key,
             "manifest": {
                 "spec": asdict(dynamics_key(spec)),
-                "engine": engine_fingerprint(backend, tick),
+                "engine": engine_fingerprint(backend, tick, tick_impl),
                 "backend": backend,
                 "tick": None if backend == "process" else float(
                     10.0 if tick is None else tick),
+                "tick_impl": (None if backend == "process"
+                              else tick_impl or "jnp"),
                 "package_version": __version__,
                 "python": sys.version.split()[0],
                 "numpy": np.__version__,

@@ -252,7 +252,8 @@ class SweepResult:
 def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
               progress: Optional[Callable[[int, int, ScenarioResult], None]]
               = None, backend: str = "process",
-              tick: float = 10.0, lane_chunk: Optional[int] = None,
+              tick: float = 10.0, tick_impl: str = "auto",
+              lane_chunk: Optional[int] = None,
               devices: Optional[Sequence[Any]] = None,
               cache: Optional[Any] = None) -> SweepResult:
     """Execute every spec; results keep the input order.
@@ -266,6 +267,12 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
       ``vmap`` program. Requires uniform ``days``/``n_files`` across the
       grid and matches the reference statistically (Table 2 tolerance),
       not bitwise; ``tick`` sets its clock step in seconds.
+
+    ``tick_impl`` (jax backend only) selects the tick-engine *kernel
+    implementation* — ``"jnp"`` | ``"pallas"`` | ``"pallas_interpret"``
+    | ``"auto"`` (``repro.kernels.registry``; ``"auto"`` resolves to the
+    compiled Pallas kernels on an accelerator and the jnp program on
+    CPU). Not to be confused with ``tick``, the clock-step *duration*.
 
     ``workers``: process count for the process backend; ``None`` uses all
     CPUs (capped at the batch size), ``0``/``1`` runs serially in-process
@@ -283,7 +290,18 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
     pricing fields, bit-identical to a fresh run on the same engine),
     only the misses are simulated, and their results are stored back.
     ``SweepResult.lanes_simulated``/``cache_hits`` report the split.
+    ``tick_impl`` is resolved to its concrete implementation *before*
+    keying, so entries from different kernel implementations never
+    cross-serve (``"jnp"`` keeps the legacy key: it is bitwise the
+    pre-registry engine).
     """
+    if backend != "jax" and tick_impl != "auto":
+        raise ValueError("tick_impl applies to backend='jax' only")
+    impl_name: Optional[str] = None
+    if backend == "jax":
+        from repro.kernels.registry import resolve_tick_impl
+
+        impl_name = resolve_tick_impl(tick_impl).name
     if cache is not None:
         from repro.core.scenarios import dynamics_key
         from repro.sim.cache import as_cache  # deferred: cache imports us
@@ -291,15 +309,18 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
         cache = as_cache(cache)
         specs = list(specs)
         t0 = time.perf_counter()
-        hits = cache.fetch(specs, backend=backend, tick=tick)
+        hits = cache.fetch(specs, backend=backend, tick=tick,
+                           tick_impl=impl_name)
         miss = [s for s in dict.fromkeys(specs) if s not in hits]
         computed: Dict["ScenarioSpec", ScenarioResult] = {}
         if miss:
             res = run_sweep(miss, workers=workers, progress=progress,
                             backend=backend, tick=tick,
+                            tick_impl=impl_name or "auto",
                             lane_chunk=lane_chunk, devices=devices)
             computed = dict(zip(miss, res.results))
-            cache.store(computed.items(), backend=backend, tick=tick)
+            cache.store(computed.items(), backend=backend, tick=tick,
+                        tick_impl=impl_name)
         merged = {**hits, **computed}
         return SweepResult(
             results=[merged[s] for s in specs],
@@ -310,6 +331,7 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
         from repro.sim.batched import run_sweep_jax  # deferred: needs jax
 
         return run_sweep_jax(specs, tick=tick, progress=progress,
+                             tick_impl=impl_name,
                              lane_chunk=lane_chunk, devices=devices)
     if lane_chunk is not None or devices is not None:
         raise ValueError("lane_chunk/devices apply to backend='jax' only")
@@ -379,13 +401,20 @@ class SweepDriver:
 
     def __init__(self, backend: str = "jax", tick: float = 10.0,
                  workers: Optional[int] = None,
+                 tick_impl: str = "auto",
                  lane_chunk: Optional[int] = None,
                  devices: Optional[Sequence[Any]] = None,
                  progress: Optional[Callable[[int, int, ScenarioResult],
                                              None]] = None,
                  cache: Optional[Any] = None):
+        if backend != "jax" and tick_impl != "auto":
+            raise ValueError("tick_impl applies to backend='jax' only")
         self.backend = backend
         self.tick = tick
+        self.tick_impl = tick_impl
+        #: resolved lazily on first run (importing jax to resolve
+        #: ``"auto"`` is deferred until the jax backend actually runs)
+        self._impl_name: Optional[str] = None
         self.workers = workers
         self.lane_chunk = lane_chunk
         self.devices = devices
@@ -409,6 +438,18 @@ class SweepDriver:
     def __call__(self, specs: Sequence["ScenarioSpec"]) -> SweepResult:
         return self.run(specs)
 
+    def _resolved_impl(self) -> Optional[str]:
+        """The concrete ``tick_impl`` name for cache keying (jax backend
+        only; resolving ``"auto"`` imports jax, so it happens on first
+        use and is then pinned for the driver's lifetime)."""
+        if self.backend != "jax":
+            return None
+        if self._impl_name is None:
+            from repro.kernels.registry import resolve_tick_impl
+
+            self._impl_name = resolve_tick_impl(self.tick_impl).name
+        return self._impl_name
+
     def run(self, specs: Sequence["ScenarioSpec"]) -> SweepResult:
         """Results for ``specs`` in order, simulating only the unseen ones."""
         from repro.core.scenarios import dynamics_key
@@ -419,7 +460,8 @@ class SweepDriver:
         hits = 0
         if new and self.cache is not None:
             served = self.cache.fetch(new, backend=self.backend,
-                                      tick=self.tick)
+                                      tick=self.tick,
+                                      tick_impl=self._resolved_impl())
             self._memo.update(served)
             hits = len(served)
             self.cache_hits += hits
@@ -428,7 +470,9 @@ class SweepDriver:
         if new:
             res = run_sweep(new, workers=self.workers,
                             progress=self.progress, backend=self.backend,
-                            tick=self.tick, lane_chunk=self.lane_chunk,
+                            tick=self.tick,
+                            tick_impl=self._resolved_impl() or "auto",
+                            lane_chunk=self.lane_chunk,
                             devices=self.devices)
             self.sweep_calls += 1
             self.configs_run += len(new)
@@ -438,7 +482,8 @@ class SweepDriver:
                 self._lane_keys.add(dynamics_key(spec))
             if self.cache is not None:
                 self.cache.store(zip(new, res.results),
-                                 backend=self.backend, tick=self.tick)
+                                 backend=self.backend, tick=self.tick,
+                                 tick_impl=self._resolved_impl())
         return SweepResult(results=[self._memo[s] for s in specs],
                            wall_s=time.perf_counter() - t0,
                            lanes_simulated=len(self._lane_keys) - lanes_before,

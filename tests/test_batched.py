@@ -360,6 +360,113 @@ def test_workload_shapes_move_the_observables(workload_grid):
         pytest.approx(steady, rel=0.05)
 
 
+# ------------------------------------------- tick_impl selection (ISSUE 7)
+QUICK = dict(days=0.1, n_files=1000)
+
+
+@pytest.fixture(scope="module")
+def impl_grid():
+    """A pricing-deduplicating grid run under every CPU-runnable
+    tick_impl (same specs, tick=60 to keep the interpret path quick)."""
+    specs = expand_grid({
+        "base": "III", "cache_tb": [10.0, 25.0],
+        "egress": ["internet", "direct"],
+        "gcs_limit_tb": [None, 5.0], "seed": 1, **QUICK,
+    })
+    out = {impl: run_sweep(specs, backend="jax", tick=60.0, tick_impl=impl)
+           for impl in ("jnp", "pallas_interpret", "auto")}
+    return specs, out
+
+
+def test_tick_impl_interpret_parity_small_grid(impl_grid):
+    """The fused Pallas kernels (interpret mode) track the jnp oracle at
+    the Table 2 bar. Agreement is statistical, not bitwise: the blocked
+    GCS-admission cumsum reassociates floats, so capacity-boundary ties
+    can admit a different file."""
+    _, out = impl_grid
+    _assert_lane_parity(out["jnp"], out["pallas_interpret"])
+
+
+def test_tick_impl_auto_resolves_to_jnp_on_cpu(impl_grid):
+    """On a CPU host "auto" must be the jnp program *bitwise* — never a
+    silent interpret-mode fallback (registry resolution contract)."""
+    import jax
+
+    _, out = impl_grid
+    if jax.default_backend() != "cpu":
+        pytest.skip("auto resolves to the compiled kernel on accelerators")
+    for a, b in zip(out["jnp"].results, out["auto"].results):
+        assert a.spec == b.spec
+        assert a.metrics == b.metrics, a.spec.label
+        assert a.cost_usd == b.cost_usd
+
+
+def test_tick_impl_interpret_deterministic(impl_grid):
+    specs, out = impl_grid
+    again = run_sweep(specs, backend="jax", tick=60.0,
+                      tick_impl="pallas_interpret")
+    for a, b in zip(out["pallas_interpret"].results, again.results):
+        assert a.metrics == b.metrics, a.spec.label
+        assert a.cost_usd == b.cost_usd
+
+
+def test_tick_impl_interpret_parity_216_config_grid():
+    """ISSUE 7 acceptance: interpret-mode kernels vs the jnp oracle on
+    the 216-config bench pricing grid (4 cache x 3 egress x 9 prices x
+    2 seeds — 8 dynamics lanes after pricing dedup), within the Table 2
+    5% tolerance per config."""
+    specs = with_seeds(expand_grid({
+        "base": "III",
+        "cache_tb": [10.0, 20.0, 40.0, 80.0],
+        "egress": ["internet", "direct", "interconnect"],
+        "storage_price": [round(0.018 + 0.002 * i, 3) for i in range(9)],
+        **QUICK,
+    }), 2)
+    assert len(specs) == 216
+    jnp_out = run_sweep(specs, backend="jax", tick=60.0, tick_impl="jnp")
+    pal_out = run_sweep(specs, backend="jax", tick=60.0,
+                        tick_impl="pallas_interpret")
+    _assert_lane_parity(jnp_out, pal_out)
+
+
+@pytest.mark.slow
+def test_tick_impl_interpret_matches_reference_table2_bar():
+    """Slow acceptance: the kernel path holds the same Table 2 bar
+    against the event-driven *reference* engine that the jnp program is
+    held to (0.75-day horizon; see the 64-config grid note)."""
+    specs = with_seeds(expand_grid({
+        "base": "III", "cache_tb": [10.0, 40.0],
+        "egress": ["internet", "direct"],
+        "days": 0.75, "n_files": 1000,
+    }), 2)
+    ref = run_sweep(specs, workers=2)
+    pal = run_sweep(specs, backend="jax", tick_impl="pallas_interpret")
+    _assert_lane_parity(ref, pal)
+
+
+def test_tick_impl_knob_validation():
+    with pytest.raises(ValueError, match="tick_impl"):
+        run_sweep([ScenarioSpec(**TINY)], backend="jax",
+                  tick_impl="fortran")
+    with pytest.raises(ValueError, match="jax"):
+        run_sweep([ScenarioSpec(**TINY)], backend="process",
+                  tick_impl="pallas_interpret")
+    # "auto" is the neutral default and valid for every backend
+    run_sweep([ScenarioSpec(days=0.1, n_files=100)], backend="process",
+              tick_impl="auto")
+
+
+def test_simulate_packed_use_pallas_deprecated():
+    """The legacy boolean still selects the same programs, but warns."""
+    spec = ScenarioSpec(base="III", cache_tb=15.0, seed=0, **QUICK)
+    grid = pack_specs([spec], tick=60.0)
+    with pytest.warns(DeprecationWarning, match="simulate_packed"):
+        legacy = simulate_packed(grid, use_pallas=False)
+    new = simulate_packed(grid, tick_impl="jnp")
+    for key in new:
+        np.testing.assert_array_equal(legacy[key], new[key], err_msg=key)
+
+
 # ------------------------------------------- acceptance grid (64 configs)
 @pytest.mark.slow
 def test_jax_backend_matches_reference_64_config_grid():

@@ -124,9 +124,9 @@ def test_carousel_kernel_matches_ref_property(n, m, seed, dt):
     bw = jnp.asarray(rng.uniform(1e3, 1e7, m).astype(np.float32))
     mode = jnp.asarray(rng.integers(0, 2, m), jnp.int32)
     k = carousel_tick(link_id, active, done, total, bw, mode, float(dt),
-                      use_pallas=True)
+                      tick_impl="pallas_interpret")
     r = carousel_tick(link_id, active, done, total, bw, mode, float(dt),
-                      use_pallas=False)
+                      tick_impl="jnp")
     np.testing.assert_allclose(k[0], r[0], rtol=1e-4)
     assert bool((k[1] == r[1]).all())
 

@@ -271,6 +271,14 @@ def engine_fingerprint(backend: str = "process",
     rejected here: resolve it per host *before* keying
     (``resolve_tick_impl``), otherwise one key could name two different
     programs on two machines.
+
+    Legacy-store caveat: entries written *before* this axis existed by a
+    TPU host carry the bare ``jax:<tick>`` key but came from the old
+    auto-selected interpret-mode kernel (~1 ulp off the jnp program), so
+    they would cross-serve ``"jnp"`` requests within tolerance but not
+    bitwise. No known store was written on an accelerator host; if one
+    exists, drop its ``jax:*`` entries or bump
+    :data:`RESULT_SCHEMA_VERSION` instead of sharing the key.
     """
     if backend == "process":
         return "process"

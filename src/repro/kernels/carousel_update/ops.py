@@ -47,7 +47,7 @@ def carousel_tick(link_id, active, done, total, bw, mode, dt,
     deprecation warning for the legacy ``use_pallas=``/``interpret=``
     aliases fires on every call, not only at trace time. The aliases
     override ``tick_impl`` when given (``use_pallas=True`` maps to the
-    kernel at this host's default interpret mode unless ``interpret=``
+    legacy interpret-mode kernel on every host unless ``interpret=``
     pins it) and will be removed next release.
     """
     if use_pallas is not UNSET or interpret is not UNSET:

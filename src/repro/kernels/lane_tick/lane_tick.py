@@ -13,15 +13,20 @@ the ``tick_impl`` registry (``repro.kernels.registry``):
   private to its row (link id = 3*site + type), so per-link counts never
   cross blocks and the whole tick is block-local one-hot matmuls
   (``carousel_update`` design notes: gathers become MXU ``dot``s).
-- ``gcs_admit_kernel``: the shared-GCS prefix-sum admission gate. The
-  jnp program runs ``GCS_ADMIT_PASSES`` passes of a *global* cumsum over
-  the site-major flattened candidate vector; here the passes are the
-  leading (sequential) grid axis and the running byte totals carry
-  across site blocks in a small VMEM-resident carry ref, fused with the
-  end-of-tick GB-second storage integration. The blocked cumsum
-  reassociates the float pass totals, so admission can differ from the
-  jnp oracle by capacity-boundary ties — statistical (Table-2) parity,
-  not bitwise; see ``docs/simulation.md``.
+- ``gcs_admit_pass_kernel``: the shared-GCS prefix-sum admission gate.
+  The jnp program runs ``GCS_ADMIT_PASSES`` passes of a *global* cumsum
+  over the site-major flattened candidate vector; here each pass is one
+  ``pallas_call`` over the sequential site grid, with the running byte
+  totals carried across site blocks in a small VMEM-resident carry ref
+  and the previous pass's admitted mask re-entering as a true (aliased)
+  input, fused with the end-of-tick GB-second storage integration.
+  (Passes cannot share one grid: compiled Pallas only preserves an
+  output window's VMEM contents across *consecutive* grid steps on the
+  same block, and a ``(passes, S)`` grid revisits each site block
+  non-consecutively.) The blocked cumsum reassociates the float pass
+  totals, so admission can differ from the jnp oracle by
+  capacity-boundary ties — statistical (Table-2) parity, not bitwise;
+  see ``docs/simulation.md``.
 - ``window_kernel``: the [S, K] job-arrival and [S, W] waiting-queue
   admission windows — C-step prefix recurrences (later candidates see
   earlier reservations; the wait queue additionally head-blocks) over
@@ -186,40 +191,44 @@ def transfer_tick(link_id, active, done, total, sizes, bw, mode, dt,
 # shared-GCS prefix-sum admission
 # ---------------------------------------------------------------------------
 
-def gcs_admit_kernel(want_ref, sizes_ref, used0_ref, limit_ref, dt_ref,
-                     month_ref, adm_ref, used_ref, gbsec_ref, carry_ref):
-    """Grid: (passes, S) sequential. ``carry_ref`` is a 3-slot VMEM
-    accumulator persisted across grid steps (written as an output the
-    caller discards): [0] bytes admitted before this pass froze, [1]
-    bytes admitted within this pass, [2] running candidate cumsum carried
+def gcs_admit_pass_kernel(want_ref, sizes_ref, adm_in_ref, used0_ref,
+                          limit_ref, dt_ref, month_ref,
+                          adm_ref, used_ref, gbsec_ref, carry_ref):
+    """One refinement pass. Grid: (S,) sequential.
+
+    ``adm_in_ref`` is the previous pass's admitted mask entering as a
+    true input (buffer-aliased onto ``adm_ref``): each site block is
+    visited exactly once per call, so no output window is revisited
+    after intervening blocks — compiled Pallas only guarantees VMEM
+    persistence across *consecutive* grid steps on the same block.
+    ``used0_ref`` is the pass-start occupancy, frozen for the whole pass
+    exactly like the jnp oracle's ``gcs_used``. ``carry_ref`` is a
+    2-slot accumulator (every step maps to the same block, hence
+    persistent; written as an output the caller discards): [0] bytes
+    admitted within this pass, [1] running candidate cumsum carried
     across site blocks (the blocked image of the jnp global cumsum)."""
-    p, s = pl.program_id(0), pl.program_id(1)
+    s = pl.program_id(0)
 
     @pl.when(s == 0)
     def _pass_init():
-        base = jnp.where(p == 0, used0_ref[0], carry_ref[0] + carry_ref[1])
-        carry_ref[0] = base
+        carry_ref[0] = 0.0
         carry_ref[1] = 0.0
-        carry_ref[2] = 0.0
 
-    @pl.when(p == 0)
-    def _adm_init():
-        adm_ref[...] = jnp.zeros_like(adm_ref)
-
+    adm_prev = adm_in_ref[...]
     want = want_ref[...] > 0.5
-    rem = want & ~(adm_ref[...] > 0.5)
+    rem = want & ~(adm_prev > 0.5)
     remf = rem.astype(jnp.float32)
     sz = sizes_ref[...]
-    csum = jnp.cumsum(sz * remf, axis=-1) + carry_ref[2]
-    new = rem & (carry_ref[0] + csum <= limit_ref[0])
+    csum = jnp.cumsum(sz * remf, axis=-1) + carry_ref[1]
+    new = rem & (used0_ref[0] + csum <= limit_ref[0])
     newf = new.astype(jnp.float32)
-    adm_ref[...] = jnp.maximum(adm_ref[...], newf)
-    carry_ref[1] += jnp.sum(sz * newf)
-    carry_ref[2] += jnp.sum(sz * remf)
-    used = carry_ref[0] + carry_ref[1]
+    adm_ref[...] = jnp.maximum(adm_prev, newf)
+    carry_ref[0] += jnp.sum(sz * newf)
+    carry_ref[1] += jnp.sum(sz * remf)
+    used = used0_ref[0] + carry_ref[0]
     used_ref[0] = used
     # end-of-tick storage integration (last grid step's write wins, with
-    # the final post-admission occupancy)
+    # the pass-end occupancy; the caller keeps the final pass's value)
     gbsec_ref[...] = month_ref[...] * (used / 1e9 * dt_ref[0])
 
 
@@ -234,33 +243,45 @@ def gcs_admit(want, sizes, gcs_used, gcs_limit, dt, month_onehot,
     Returns ``(admitted [S, F] f32 mask, gcs_used' f32 scalar,
     gbsec_mo_delta [n_months])`` — the third output is the fused
     ``gcs_used'/1e9*dt`` month-bucketed GB-second integration.
+
+    Each pass is one ``pallas_call`` (see ``gcs_admit_pass_kernel``);
+    the admitted mask and the pass-start occupancy flow between passes
+    as regular JAX values, the mask donated back in via
+    ``input_output_aliases``.
     """
     if interpret is None:
         interpret = default_interpret()
     S, F = want.shape
     n_months = month_onehot.shape[0]
     fp = F + (-F) % F_BLOCK
-    row = pl.BlockSpec((1, fp), lambda p, s: (s, 0))
-    one = pl.BlockSpec((1,), lambda p, s: (0,))
-    months = pl.BlockSpec((n_months,), lambda p, s: (0,))
-    out = pl.pallas_call(
-        gcs_admit_kernel,
-        grid=(n_passes, S),
-        in_specs=[row, row, one, one, one, months],
-        out_specs=[row, one, months, pl.BlockSpec((3,), lambda p, s: (0,))],
+    row = pl.BlockSpec((1, fp), lambda s: (s, 0))
+    one = pl.BlockSpec((1,), lambda s: (0,))
+    months = pl.BlockSpec((n_months,), lambda s: (0,))
+    admit_pass = pl.pallas_call(
+        gcs_admit_pass_kernel,
+        grid=(S,),
+        in_specs=[row, row, row, one, one, one, months],
+        out_specs=[row, one, months, pl.BlockSpec((2,), lambda s: (0,))],
         out_shape=[
             jax.ShapeDtypeStruct((S, fp), jnp.float32),
             jax.ShapeDtypeStruct((1,), jnp.float32),
             jax.ShapeDtypeStruct((n_months,), jnp.float32),
-            jax.ShapeDtypeStruct((3,), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
         ],
+        input_output_aliases={2: 0},
         interpret=interpret,
-    )(_pad_f(want.astype(jnp.float32), fp), _pad_f(sizes, fp),
-      jnp.reshape(gcs_used, (1,)).astype(jnp.float32),
-      jnp.reshape(gcs_limit, (1,)).astype(jnp.float32),
-      jnp.reshape(dt, (1,)).astype(jnp.float32),
-      month_onehot.astype(jnp.float32))
-    admitted, used, gbsec, _carry = out
+    )
+    wantf = _pad_f(want.astype(jnp.float32), fp)
+    sizesf = _pad_f(sizes, fp)
+    limit = jnp.reshape(gcs_limit, (1,)).astype(jnp.float32)
+    dtv = jnp.reshape(dt, (1,)).astype(jnp.float32)
+    monthf = month_onehot.astype(jnp.float32)
+    admitted = jnp.zeros((S, fp), jnp.float32)
+    used = jnp.reshape(gcs_used, (1,)).astype(jnp.float32)
+    gbsec = monthf * (used[0] / 1e9 * dtv[0])  # n_passes == 0 degenerate
+    for _ in range(n_passes):
+        admitted, used, gbsec, _carry = admit_pass(
+            wantf, sizesf, admitted, used, limit, dtv, monthf)
     return admitted[:, :F], used[0], gbsec
 
 

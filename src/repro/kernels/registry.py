@@ -111,6 +111,13 @@ def resolve_tick_impl(name: Optional[str] = "auto") -> TickImpl:
         name = "auto"
     if isinstance(name, TickImpl):
         return name
+    if isinstance(name, bool):
+        raise ValueError(
+            f"tick_impl={name!r} is a boolean — this looks like the "
+            "deprecated use_pallas= flag landing in the tick_impl slot; "
+            "pass use_pallas= by keyword (one more release) or use "
+            "tick_impl="
+            f"{'pallas_interpret' if name else 'jnp'!r}")
     if name == "auto":
         name = default_tick_impl()
     try:
@@ -126,19 +133,27 @@ def tick_impl_from_use_pallas(use_pallas, *, where: str,
     """Map a legacy ``use_pallas=`` value to a ``tick_impl`` name,
     emitting the one-release ``DeprecationWarning``.
 
-    Mapping preserves the literal old behavior: ``True`` ran the Pallas
-    kernel in interpret mode on CPU and compiled on an accelerator;
-    ``False`` ran the jnp program; ``None`` auto-detected per backend.
+    ``True`` maps to ``"pallas_interpret"`` on *every* host: the
+    pre-registry code hardcoded ``interpret=True`` everywhere, so this
+    preserves the literal numerics the alias always produced
+    (accelerator users upgrade to ``tick_impl="pallas"``/``"auto"`` for
+    the compiled kernel). ``False`` ran the jnp program and maps to
+    ``"jnp"``. ``None`` meant per-backend auto-detection and maps to
+    ``"auto"`` — which on an accelerator now selects the compiled
+    kernel rather than the old interpret run. The mapping never probes
+    the platform, so it stays jax-free.
     """
     if use_pallas is None:
         mapped = "auto"
     elif use_pallas:
-        mapped = "pallas" if on_accelerator() else "pallas_interpret"
+        mapped = "pallas_interpret"
     else:
         mapped = "jnp"
     warnings.warn(
         f"{where}: use_pallas= is deprecated; pass "
-        f"tick_impl={mapped!r} instead (use_pallas={use_pallas!r} maps "
-        f"to it on this host). The alias will be removed next release.",
+        f"tick_impl={mapped!r} instead (use_pallas=True always ran the "
+        f"kernels in interpret mode — use tick_impl='pallas' or 'auto' "
+        f"to compile on an accelerator). The alias will be removed next "
+        f"release.",
         DeprecationWarning, stacklevel=stacklevel)
     return mapped

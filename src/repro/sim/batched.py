@@ -272,11 +272,12 @@ def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl):
         # site; earlier candidates' admissions are visible to later ones),
         # refined over a few passes so a too-big blocker does not head-
         # block the fitting candidates behind it. The kernel path runs
-        # the passes as a sequential Pallas grid axis with the byte
-        # totals carried across site blocks, fusing the end-of-tick
-        # GB-second integration; its blocked cumsum reassociates the
-        # float totals, so admission matches the jnp program
-        # statistically (capacity-boundary ties), not bitwise.
+        # each pass as one Pallas call over the sequential site grid,
+        # byte totals carried across site blocks and the previous
+        # pass's mask re-entering as an aliased input, fusing the
+        # end-of-tick GB-second integration; its blocked cumsum
+        # reassociates the float totals, so admission matches the jnp
+        # program statistically (capacity-boundary ties), not bitwise.
         if use_kernel:
             mig_f, gcs_used, gbsec_add = lane_tick.gcs_admit(
                 want_mig, sizes, st["gcs_used"], gcs_limit, dt,
@@ -665,11 +666,17 @@ def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
     chunks round-robin when more than one is present.
 
     ``use_pallas=`` is a deprecated alias for ``tick_impl`` (one release,
-    ``DeprecationWarning``); it overrides ``tick_impl`` when given.
+    ``DeprecationWarning``); it overrides ``tick_impl`` when given. A
+    boolean arriving in the ``tick_impl`` slot — a legacy *positional*
+    ``use_pallas`` call, since ``tick_impl`` reuses that slot — is
+    routed through the same alias shim rather than rejected.
     """
     if use_pallas is not UNSET:
         tick_impl = tick_impl_from_use_pallas(
             use_pallas, where="simulate_packed")
+    elif isinstance(tick_impl, bool):
+        tick_impl = tick_impl_from_use_pallas(
+            tick_impl, where="simulate_packed")
     impl = resolve_tick_impl(tick_impl)
     if lane_chunk is not None and lane_chunk <= 0:
         raise ValueError(f"lane_chunk must be > 0, got {lane_chunk!r}")
@@ -786,7 +793,9 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
     ``tick`` is the clock-step *duration* in seconds; ``tick_impl``
     selects the kernel *implementation* (see ``simulate_packed`` /
     ``repro.kernels.registry``) — independent axes despite the shared
-    prefix. ``use_pallas=`` is the deprecated alias for ``tick_impl``.
+    prefix. ``use_pallas=`` is the deprecated alias for ``tick_impl``; a
+    boolean in the ``tick_impl`` slot (a legacy positional ``use_pallas``
+    call — ``tick_impl`` reuses that slot) routes through the same shim.
 
     ``lane_chunk``/``devices``: see ``simulate_packed`` — bounded-memory
     chunked execution with optional multi-device round-robin.
@@ -796,6 +805,9 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
     if use_pallas is not UNSET:
         tick_impl = tick_impl_from_use_pallas(
             use_pallas, where="run_sweep_jax")
+    elif isinstance(tick_impl, bool):
+        tick_impl = tick_impl_from_use_pallas(
+            tick_impl, where="run_sweep_jax")
     t0 = time.perf_counter()
     grid = pack_specs(specs, tick=tick)
     out = simulate_packed(grid, tick_impl=tick_impl,

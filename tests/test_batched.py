@@ -467,6 +467,19 @@ def test_simulate_packed_use_pallas_deprecated():
         np.testing.assert_array_equal(legacy[key], new[key], err_msg=key)
 
 
+def test_simulate_packed_positional_use_pallas_routes_through_shim():
+    """tick_impl reuses the old use_pallas positional slot, so a legacy
+    positional boolean call must warn and run — not die on an "unknown
+    tick_impl" ValueError."""
+    spec = ScenarioSpec(base="III", cache_tb=15.0, seed=0, **QUICK)
+    grid = pack_specs([spec], tick=60.0)
+    with pytest.warns(DeprecationWarning, match="simulate_packed"):
+        legacy = simulate_packed(grid, False)
+    new = simulate_packed(grid, tick_impl="jnp")
+    for key in new:
+        np.testing.assert_array_equal(legacy[key], new[key], err_msg=key)
+
+
 # ------------------------------------------- acceptance grid (64 configs)
 @pytest.mark.slow
 def test_jax_backend_matches_reference_64_config_grid():

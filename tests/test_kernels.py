@@ -94,6 +94,35 @@ def test_tick_impl_unknown_name_rejected():
     assert TICK_IMPL_CHOICES[0] == "auto"
 
 
+def test_tick_impl_boolean_rejected_with_alias_pointer():
+    """A bool in the tick_impl slot (a legacy positional use_pallas
+    call) gets a pointer at the deprecated alias, not a bare KeyError."""
+    from repro.kernels.registry import resolve_tick_impl
+
+    for legacy in (True, False):
+        with pytest.raises(ValueError, match="use_pallas"):
+            resolve_tick_impl(legacy)
+
+
+def test_use_pallas_true_maps_to_interpret_on_every_host(monkeypatch):
+    """The deprecated flag preserves its literal old numerics: the
+    pre-registry code hardcoded interpret=True everywhere, so True maps
+    to 'pallas_interpret' even on accelerators — and the mapping never
+    probes the platform (stays jax-free)."""
+    from repro.kernels import registry
+
+    def boom():
+        raise AssertionError("the legacy mapping must not probe the "
+                             "platform")
+
+    monkeypatch.setattr(registry, "_platform", boom)
+    expected = {True: "pallas_interpret", False: "jnp", None: "auto"}
+    for legacy, want in expected.items():
+        with pytest.warns(DeprecationWarning, match="use_pallas"):
+            assert registry.tick_impl_from_use_pallas(
+                legacy, where="test") == want
+
+
 def test_carousel_tick_use_pallas_deprecated():
     """The legacy boolean still works (one release) but warns, and maps
     onto the same implementations as the tick_impl axis."""

@@ -51,6 +51,8 @@ decide-demo:
 	$(PY) scripts/decide.py --days 0.1 --files 1000 --cache-tb 5,20,80 \
 	    --storage-price '' --egress internet,direct --max-rounds 2 \
 	    --cache-dir results/decide_cache \
+	    --metrics-out results/decide_metrics.prom \
+	    --trace-out results/decide_trace.json \
 	    --cross-check --quiet --json results/decide_demo.json
 
 lint:

@@ -40,6 +40,11 @@ and stored) and then warm through a *fresh* ``SweepDriver`` (every config
 served from disk, zero lanes simulated). ``sweep.cache.warm``'s derived
 column is the cold/warm wall-time ratio — the acceptance bar is >= 5x.
 
+Part 7 is the telemetry-overhead row (``sweep.obs.overhead``, ISSUE 8):
+the same warm pricing grid with the metrics registry enabled vs disabled,
+interleaved min-of-3. Its derived column is the enabled/disabled wall
+ratio; the acceptance bar is < 1.05 (< 5% of warm throughput).
+
 Spawned pool workers are pinned to ``JAX_PLATFORMS=cpu`` by
 ``run_sweep``'s worker initializer, so the process rows cannot hang
 probing accelerator devices while this process holds them.
@@ -62,6 +67,12 @@ from repro.sim.sweep import SweepDriver, run_sweep
 #: ``test_batched.test_jax_backend_tick_coarsening_stays_close`` pins this
 #: exact tick within 2%/5% (jobs/cost) of the 10 s clock.
 JAX_BENCH_TICK = 60.0
+
+
+def _cps(res) -> float:
+    """``configs_per_sec`` as a number: the floor makes it ``None`` on
+    sub-millisecond walls, which a derived column reports as 0."""
+    return res.configs_per_sec or 0.0
 
 
 def _grid(n_configs: int, days: float, n_files: int):
@@ -200,6 +211,33 @@ def _cache_rows(days: float, n_files: int, n_prices: int) -> List[Dict]:
     ]
 
 
+def _obs_overhead_rows(jspecs: List[ScenarioSpec]) -> List[Dict]:
+    """``sweep.obs.overhead``: warm batched sweeps with the telemetry
+    registry enabled vs disabled (ISSUE 8), interleaved min-of-3 so OS
+    noise cancels. The derived column is enabled/disabled wall — the
+    acceptance bar is < 1.05 (telemetry costs < 5% of warm throughput).
+    The compile is already absorbed by the caller's warm run."""
+    from repro.obs.metrics import get_registry
+
+    reg = get_registry()
+    on = off = float("inf")
+    try:
+        for _ in range(3):
+            reg.disable()
+            t0 = time.perf_counter()
+            run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
+            off = min(off, time.perf_counter() - t0)
+            reg.enable()
+            t0 = time.perf_counter()
+            run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
+            on = min(on, time.perf_counter() - t0)
+    finally:
+        reg.enable()
+    return [{"name": f"sweep.obs.overhead.{len(jspecs)}cfg",
+             "us_per_call": on / len(jspecs) * 1e6,
+             "derived": on / off if off > 0 else 0.0}]
+
+
 def _workload_rows(days: float, n_files: int) -> List[Dict]:
     specs = expand_grid({"base": "III", "days": days, "n_files": n_files,
                          "cache_tb": 20.0, "workload": list(WORKLOAD_PANEL)})
@@ -214,7 +252,7 @@ def _workload_rows(days: float, n_files: int) -> List[Dict]:
     ]
     rows.append({"name": f"sweep.workload.batch.{len(specs)}cfg",
                  "us_per_call": res.wall_s * 1e6,
-                 "derived": res.configs_per_sec})
+                 "derived": _cps(res)})
     return rows
 
 
@@ -228,10 +266,10 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
     rows = [
         {"name": f"sweep.serial.{len(specs)}cfg",
          "us_per_call": serial.wall_s / len(specs) * 1e6,
-         "derived": serial.configs_per_sec},
+         "derived": _cps(serial)},
         {"name": f"sweep.parallel{workers}.{len(specs)}cfg",
          "us_per_call": par.wall_s / len(specs) * 1e6,
-         "derived": par.configs_per_sec},
+         "derived": _cps(par)},
         {"name": "sweep.speedup",
          "us_per_call": par.wall_s * 1e6,
          "derived": serial.wall_s / par.wall_s if par.wall_s > 0 else 0.0},
@@ -253,13 +291,13 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
     cold = run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
     warm = run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK)
     base = run_sweep(subset, workers=workers)
-    warm_cps = warm.configs_per_sec  # configs/sec (lanes x pricing fan-out)
-    base_cps = base.configs_per_sec
+    warm_cps = _cps(warm)  # configs/sec (lanes x pricing fan-out)
+    base_cps = _cps(base)
     g = len(jspecs)
     rows += [
         {"name": f"sweep.jax.cold.{g}cfg{n_lanes}lane",
          "us_per_call": cold.wall_s / g * 1e6,
-         "derived": cold.configs_per_sec},
+         "derived": _cps(cold)},
         {"name": f"sweep.jax.warm.{g}cfg{n_lanes}lane",
          "us_per_call": warm.wall_s / g * 1e6,
          "derived": warm_cps},
@@ -285,7 +323,7 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
     rows += [
         {"name": f"tick.pallas.sweep_warm.{g}cfg{n_lanes}lane",
          "us_per_call": pallas_warm.wall_s / g * 1e6,
-         "derived": pallas_warm.configs_per_sec},
+         "derived": _cps(pallas_warm)},
         # derived = interpret-mode wall / jnp wall on the identical warm
         # grid (values > 1 mean the interpreter overhead, expected on CPU)
         {"name": "tick.pallas.sweep_vs_jnp",
@@ -293,6 +331,7 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
          "derived": pallas_warm.wall_s / warm.wall_s
          if warm.wall_s > 0 else 0.0},
     ]
+    rows += _obs_overhead_rows(jspecs)
     rows += _lane_scaling_rows(0.1, jfiles,
                                [16, 64] if fast else [16, 64, 256])
     rows += _workload_rows(jdays, jfiles)

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
 import os
 import sys
 
@@ -29,8 +30,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.scenarios import EGRESS_OPTIONS, ScenarioSpec
 from repro.kernels.registry import TICK_IMPL_CHOICES
+from repro.obs.logs import LOG_LEVELS, setup_logging
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer
 from repro.sim.decide import OnPremDisk, decide
 from repro.sim.sweep import SweepDriver, run_sweep
+
+log = logging.getLogger("decide")
 
 #: The benchmark pricing grid's storage-price axis (USD/GB-month). Must
 #: stay in sync with ``benchmarks/bench_sweep.py`` (``_pricing_grid`` /
@@ -139,8 +145,20 @@ def main(argv=None) -> int:
                     help="write the decision report as JSON")
     ap.add_argument("--report", default="",
                     help="write the markdown report to this path")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the metrics-registry snapshot (Prometheus "
+                         "text format, or JSON when PATH ends in .json)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="enable span tracing and write Chrome trace-event "
+                         "JSON (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--log-level", default="info", choices=LOG_LEVELS,
+                    help="stderr logging verbosity (default info)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    run_id = setup_logging(args.log_level)
+    if args.trace_out:
+        get_tracer().enable(run_id)
 
     try:
         axes = _build_axes(args)
@@ -151,25 +169,25 @@ def main(argv=None) -> int:
             gcs_limit_tb=0.0,
             workload=args.workload or "steady")
     except ValueError as e:
-        print(f"error: {e}", file=sys.stderr)
+        log.error("%s", e)
         return 2
 
     if args.tick_impl != "auto" and args.backend != "jax":
-        print("error: --tick-impl requires --backend jax", file=sys.stderr)
+        log.error("--tick-impl requires --backend jax")
         return 2
     cache_dir = None if args.no_cache else args.cache_dir
     driver = SweepDriver(backend=args.backend, tick=args.tick,
                          workers=args.workers, tick_impl=args.tick_impl,
                          lane_chunk=args.lane_chunk, cache=cache_dir)
     if cache_dir and not args.quiet:
-        print(f"decide: result cache at {cache_dir}", flush=True)
+        log.info("result cache at %s", cache_dir)
     if not args.quiet:
         n0 = len(axes["cache_tb"]) * len(axes.get("egress", [1])) * \
             max(len(axes.get("storage_price", [1])), 1) * args.seeds
-        print(f"decide: coarse grid {n0} configs, backend={args.backend}, "
-              f"{args.seeds} seed(s), refining "
-              f"{args.refine or ['cache_tb']} to rel_tol={args.rel_tol:g}",
-              flush=True)
+        log.info("coarse grid %d configs, backend=%s, %d seed(s), "
+                 "refining %s to rel_tol=%g",
+                 n0, args.backend, args.seeds,
+                 args.refine or ["cache_tb"], args.rel_tol)
 
     try:
         report = decide(
@@ -187,7 +205,7 @@ def main(argv=None) -> int:
             z=args.z,
         )
     except ValueError as e:  # bad ranges/axes surface as CLI usage errors
-        print(f"error: {e}", file=sys.stderr)
+        log.error("%s", e)
         return 2
     # decide() auto-fills the driver accounting (sweep_calls, configs_run,
     # lanes_simulated, cache_hits, sweep_wall_s, cache hit/miss counters);
@@ -202,7 +220,7 @@ def main(argv=None) -> int:
             os.makedirs(os.path.dirname(args.report), exist_ok=True)
         with open(args.report, "w") as f:
             f.write(md)
-        print(f"wrote {args.report}")
+        log.info("wrote %s", args.report)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:
         with open(summary, "a") as f:
@@ -212,7 +230,14 @@ def main(argv=None) -> int:
             os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump(report.to_json_dict(), f, indent=2)
-        print(f"wrote {args.json_out}")
+        log.info("wrote %s", args.json_out)
+    if args.metrics_out:
+        get_registry().dump(args.metrics_out)
+        log.info("wrote %s", args.metrics_out)
+    if args.trace_out:
+        get_tracer().dump(args.trace_out)
+        log.info("wrote %s (%d spans)", args.trace_out,
+                 len(get_tracer().events))
 
     if args.cross_check:
         other = "process" if args.backend == "jax" else "jax"
@@ -229,8 +254,8 @@ def main(argv=None) -> int:
         specs = list(dict.fromkeys(
             r.spec for p in points for r in p.results))
         if not args.quiet:
-            print(f"cross-check: re-running {len(specs)} configs on "
-                  f"backend={other} ...", flush=True)
+            log.info("cross-check: re-running %d configs on backend=%s ...",
+                     len(specs), other)
         # The cross-check reads through the same cache (keys are
         # engine-fingerprinted, so the other backend's entries never
         # collide with this run's) — a warm nightly re-check is free.
@@ -250,17 +275,17 @@ def main(argv=None) -> int:
             if dj > args.check_tol_jobs or dc > args.check_tol_cost:
                 bad.append(line)
             elif not args.quiet:
-                print(line)
+                log.info("%s", line)
         if bad:
-            print(f"cross-check FAILED ({len(bad)}/{len(specs)} configs "
-                  f"beyond jobs {args.check_tol_jobs:.0%} / cost "
-                  f"{args.check_tol_cost:.0%}):", file=sys.stderr)
+            log.error("cross-check FAILED (%d/%d configs beyond jobs "
+                      "%.0f%% / cost %.0f%%):", len(bad), len(specs),
+                      100 * args.check_tol_jobs, 100 * args.check_tol_cost)
             for line in bad:
-                print(line, file=sys.stderr)
+                log.error("%s", line)
             return 1
-        print(f"cross-check OK: {len(specs)} configs agree within "
-              f"jobs {args.check_tol_jobs:.0%} / cost "
-              f"{args.check_tol_cost:.0%} on both backends")
+        log.info("cross-check OK: %d configs agree within jobs %.0f%% / "
+                 "cost %.0f%% on both backends", len(specs),
+                 100 * args.check_tol_jobs, 100 * args.check_tol_cost)
     return 0
 
 

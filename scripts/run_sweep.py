@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
 import os
 import sys
 
@@ -36,8 +37,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.scenarios import EGRESS_OPTIONS, specs_from_mapping
 from repro.kernels.registry import TICK_IMPL_CHOICES
+from repro.obs.logs import LOG_LEVELS, setup_logging
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer, jax_device_profile
 from repro.sim.output import write_csv
 from repro.sim.sweep import run_sweep
+
+log = logging.getLogger("run_sweep")
 
 
 def _floats(text: str) -> list:
@@ -167,8 +173,29 @@ def main(argv=None) -> int:
     ap.add_argument("--pareto", default="", help="write the Pareto front as CSV")
     ap.add_argument("--aggregate", default="",
                     help="write the across-seed aggregate table as CSV")
+    ap.add_argument("--record-series", type=int, default=None, metavar="N",
+                    help="jax backend: capture per-tick time series on "
+                         "device, sampled every N ticks (1 = every tick); "
+                         "digests land in the JSON output's series block. "
+                         "See docs/observability.md")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the metrics-registry snapshot (Prometheus "
+                         "text format, or JSON when PATH ends in .json)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="enable span tracing and write Chrome trace-event "
+                         "JSON (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--jax-profile", default="", metavar="DIR",
+                    help="with --trace-out: bracket the sweep in "
+                         "jax.profiler device tracing (TensorBoard "
+                         "logdir; compiled-path deep dive)")
+    ap.add_argument("--log-level", default="info", choices=LOG_LEVELS,
+                    help="stderr logging verbosity (default info)")
     ap.add_argument("--quiet", action="store_true", help="no per-config progress")
     args = ap.parse_args(argv)
+
+    run_id = setup_logging(args.log_level)
+    if args.trace_out:
+        get_tracer().enable(run_id)
 
     try:
         if args.spec:
@@ -186,53 +213,60 @@ def main(argv=None) -> int:
         else:
             specs = specs_from_mapping({"axes": _build_axes(args)})
     except (ValueError, OSError) as e:
-        print(f"error: {e}", file=sys.stderr)
+        log.error("%s", e)
         return 2
     if not specs:
-        print("error: the grid expanded to 0 configs", file=sys.stderr)
+        log.error("the grid expanded to 0 configs")
         return 2
 
     if args.lane_chunk is not None and args.backend != "jax":
-        print("error: --lane-chunk requires --backend jax", file=sys.stderr)
+        log.error("--lane-chunk requires --backend jax")
         return 2
     if args.tick_impl != "auto" and args.backend != "jax":
-        print("error: --tick-impl requires --backend jax", file=sys.stderr)
+        log.error("--tick-impl requires --backend jax")
+        return 2
+    if args.record_series is not None and args.backend != "jax":
+        log.error("--record-series requires --backend jax "
+                  "(use --curves for the process backend)")
         return 2
     if args.backend == "jax":
         chunk = ("" if args.lane_chunk is None
                  else f", lane_chunk={args.lane_chunk}")
-        print(f"sweep: {len(specs)} configs, backend=jax "
-              f"(tick={args.tick:g}s, tick_impl={args.tick_impl}{chunk})",
-              flush=True)
+        log.info("sweep: %d configs, backend=jax (tick=%gs, tick_impl=%s%s)",
+                 len(specs), args.tick, args.tick_impl, chunk)
     else:
         workers = (min(len(specs), os.cpu_count() or 1)
                    if args.workers is None else args.workers)
-        print(f"sweep: {len(specs)} configs, "
-              f"workers={max(workers, 1)}", flush=True)
+        log.info("sweep: %d configs, workers=%d",
+                 len(specs), max(workers, 1))
 
     def progress(done, total, result):
         if not args.quiet:
-            print(f"  [{done:3d}/{total}] {result.spec.label:55s} "
-                  f"jobs={result.jobs_done:8.0f} cost=${result.cost_usd:12,.2f}",
-                  flush=True)
+            log.info("[%3d/%d] %-55s jobs=%8.0f cost=$%s",
+                     done, total, result.spec.label, result.jobs_done,
+                     f"{result.cost_usd:12,.2f}")
 
     cache_dir = None if args.no_cache else args.cache_dir
     if cache_dir:
-        print(f"cache: {cache_dir}", flush=True)
+        log.info("cache: %s", cache_dir)
     try:
-        result = run_sweep(specs, workers=args.workers, progress=progress,
-                           backend=args.backend, tick=args.tick,
-                           tick_impl=args.tick_impl,
-                           lane_chunk=args.lane_chunk, cache=cache_dir)
+        with jax_device_profile(args.jax_profile or None):
+            result = run_sweep(specs, workers=args.workers,
+                               progress=progress,
+                               backend=args.backend, tick=args.tick,
+                               tick_impl=args.tick_impl,
+                               lane_chunk=args.lane_chunk, cache=cache_dir,
+                               record_series=args.record_series)
     except ValueError as e:  # e.g. non-uniform grid on the jax backend
-        print(f"error: {e}", file=sys.stderr)
+        log.error("%s", e)
         return 2
-    print(f"done in {result.wall_s:.1f}s "
-          f"({result.configs_per_sec:.2f} configs/sec)")
+    cps = result.configs_per_sec
+    log.info("done in %.1fs%s", result.wall_s,
+             "" if cps is None else f" ({cps:.2f} configs/sec)")
     if cache_dir:
-        print(f"cache: {result.cache_hits} of {len(result)} configs served "
-              f"from cache, {result.lanes_simulated} dynamics lane(s) "
-              "simulated")
+        log.info("cache: %d of %d configs served from cache, "
+                 "%d dynamics lane(s) simulated",
+                 result.cache_hits, len(result), result.lanes_simulated)
 
     front = result.pareto_front()
     print(f"\nPareto front (min cost, max jobs) — {len(front)} of "
@@ -243,17 +277,24 @@ def main(argv=None) -> int:
 
     if args.out:
         result.to_csv(args.out)
-        print(f"\nwrote {args.out} ({len(result)} rows)")
+        log.info("wrote %s (%d rows)", args.out, len(result))
     if args.json_out:
         result.to_json(args.json_out)
-        print(f"wrote {args.json_out}")
+        log.info("wrote %s", args.json_out)
     if args.pareto:
         result.pareto_to_csv(args.pareto)
-        print(f"wrote {args.pareto} ({len(front)} rows)")
+        log.info("wrote %s (%d rows)", args.pareto, len(front))
     if args.aggregate:
         rows = result.aggregate_seeds()
         write_csv(args.aggregate, rows)
-        print(f"wrote {args.aggregate} ({len(rows)} rows)")
+        log.info("wrote %s (%d rows)", args.aggregate, len(rows))
+    if args.metrics_out:
+        get_registry().dump(args.metrics_out)
+        log.info("wrote %s", args.metrics_out)
+    if args.trace_out:
+        get_tracer().dump(args.trace_out)
+        log.info("wrote %s (%d spans)", args.trace_out,
+                 len(get_tracer().events))
     return 0
 
 

@@ -173,6 +173,7 @@ class _SiteState:
         # stats
         self.jobs_done = 0
         self.jobs_submitted = 0
+        self.running = 0  # jobs between data-ready and completion
         self.download_bytes = 0.0
         self.tape_disk_bytes = 0.0
         self.gcs_disk_bytes = 0.0
@@ -308,9 +309,11 @@ class HCDCScenario:
         run = float(self._dur_dist.sample(self.rng))
         st.download_bytes += size
         st.l_download.traffic += size
+        st.running += 1
 
         def finish(sim_, now_, st=st, fid=job.fid):
             st.jobs_done += 1
+            st.running -= 1
             st.consumers[fid] -= 1
             if (st.consumers[fid] == 0 and st.disk_state[fid] == PRESENT
                     and st.disk.limit is not None):
@@ -400,6 +403,7 @@ class HCDCScenario:
                 if scenario.cfg.curves and self.tick % 360 == 0:  # hourly
                     for st in scenario.sites:
                         scenario.out.ts(f"{st.spec.name}.disk_used").record(now, st.disk.used)
+                        scenario.out.ts(f"{st.spec.name}.running_jobs").record(now, st.running)
                     scenario.out.ts("gcs_used").record(now, scenario.gcs.used)
                 self.tick += 1
 

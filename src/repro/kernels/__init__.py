@@ -8,8 +8,8 @@ interpret mode (correctness); on TPU the same calls compile to Mosaic.
 Kernel selection is the ``tick_impl`` axis (``registry.py``): one name —
 ``"jnp" | "pallas" | "pallas_interpret" | "auto"`` — threaded from
 ``run_sweep``/``SweepDriver``/the CLIs down to the kernels, replacing
-the former per-function ``use_pallas``/``interpret`` booleans (kept one
-release as deprecated aliases).
+the former per-function ``use_pallas``/``interpret`` booleans (removed
+after their one-release deprecation window).
 
 - ``carousel_update``: the paper's transfer-manager tick (its stated
   linear-scaling hot loop) vectorized for the MXU: per-link counts and

@@ -6,7 +6,8 @@ runs the jnp reference, ``"pallas"`` the compiled kernel,
 ``"pallas_interpret"`` the kernel in interpret mode, and ``"auto"``
 resolves per host (compiled on an accelerator, jnp on CPU — never
 silently interpret). The pre-registry ``use_pallas=``/``interpret=``
-booleans remain one release as deprecated aliases.
+aliases are gone; a boolean in the ``tick_impl`` slot raises with the
+upgrade hint.
 
 ``simulate_ticks`` scans the tick over many steps — the fully
 vectorized tick engine (the accelerator-native equivalent of the
@@ -22,11 +23,7 @@ import jax.numpy as jnp
 
 from repro.kernels.carousel_update.carousel_update import carousel_tick_pallas
 from repro.kernels.carousel_update.ref import carousel_tick_ref
-from repro.kernels.registry import (
-    UNSET,
-    resolve_tick_impl,
-    tick_impl_from_use_pallas,
-)
+from repro.kernels.registry import resolve_tick_impl
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
@@ -39,24 +36,10 @@ def _carousel_tick(link_id, active, done, total, bw, mode, dt,
 
 
 def carousel_tick(link_id, active, done, total, bw, mode, dt,
-                  tick_impl: str = "auto", use_pallas=UNSET,
-                  interpret=UNSET):
-    """One transfer-manager tick; implementation selected by ``tick_impl``.
-
-    Deliberately a plain function around a jitted core so the
-    deprecation warning for the legacy ``use_pallas=``/``interpret=``
-    aliases fires on every call, not only at trace time. The aliases
-    override ``tick_impl`` when given (``use_pallas=True`` maps to the
-    legacy interpret-mode kernel on every host unless ``interpret=``
-    pins it) and will be removed next release.
-    """
-    if use_pallas is not UNSET or interpret is not UNSET:
-        mapped = tick_impl_from_use_pallas(
-            True if use_pallas is UNSET else use_pallas,
-            where="carousel_tick")
-        if mapped != "jnp" and interpret is not UNSET:
-            mapped = "pallas_interpret" if interpret else "pallas"
-        tick_impl = mapped
+                  tick_impl: str = "auto"):
+    """One transfer-manager tick; implementation selected by ``tick_impl``
+    (resolved outside the jitted core so ``"auto"`` probes the platform
+    exactly once per call, never inside a trace)."""
     impl = resolve_tick_impl(tick_impl)
     return _carousel_tick(link_id, active, done, total, bw, mode, dt,
                           use_kernel=impl.use_kernel,

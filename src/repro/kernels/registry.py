@@ -38,14 +38,10 @@ run).
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
-#: Sentinel for "caller did not pass the deprecated parameter" — distinct
-#: from ``None``, which was itself a meaningful legacy value
-#: (``use_pallas=None`` meant per-backend auto-detection).
-UNSET = object()
+from repro.obs.metrics import get_registry
 
 
 @dataclass(frozen=True)
@@ -114,46 +110,20 @@ def resolve_tick_impl(name: Optional[str] = "auto") -> TickImpl:
     if isinstance(name, bool):
         raise ValueError(
             f"tick_impl={name!r} is a boolean — this looks like the "
-            "deprecated use_pallas= flag landing in the tick_impl slot; "
-            "pass use_pallas= by keyword (one more release) or use "
-            "tick_impl="
-            f"{'pallas_interpret' if name else 'jnp'!r}")
+            "removed use_pallas= flag landing in the tick_impl slot; "
+            "use tick_impl="
+            f"{'pallas_interpret' if name else 'jnp'!r} "
+            "(or 'pallas'/'auto' to compile on an accelerator)")
+    requested = name
     if name == "auto":
         name = default_tick_impl()
     try:
-        return TICK_IMPLS[name]
+        impl = TICK_IMPLS[name]
     except KeyError:
         raise ValueError(
             f"unknown tick_impl {name!r} "
             f"(expected one of {', '.join(TICK_IMPL_CHOICES)})") from None
-
-
-def tick_impl_from_use_pallas(use_pallas, *, where: str,
-                              stacklevel: int = 3) -> str:
-    """Map a legacy ``use_pallas=`` value to a ``tick_impl`` name,
-    emitting the one-release ``DeprecationWarning``.
-
-    ``True`` maps to ``"pallas_interpret"`` on *every* host: the
-    pre-registry code hardcoded ``interpret=True`` everywhere, so this
-    preserves the literal numerics the alias always produced
-    (accelerator users upgrade to ``tick_impl="pallas"``/``"auto"`` for
-    the compiled kernel). ``False`` ran the jnp program and maps to
-    ``"jnp"``. ``None`` meant per-backend auto-detection and maps to
-    ``"auto"`` — which on an accelerator now selects the compiled
-    kernel rather than the old interpret run. The mapping never probes
-    the platform, so it stays jax-free.
-    """
-    if use_pallas is None:
-        mapped = "auto"
-    elif use_pallas:
-        mapped = "pallas_interpret"
-    else:
-        mapped = "jnp"
-    warnings.warn(
-        f"{where}: use_pallas= is deprecated; pass "
-        f"tick_impl={mapped!r} instead (use_pallas=True always ran the "
-        f"kernels in interpret mode — use tick_impl='pallas' or 'auto' "
-        f"to compile on an accelerator). The alias will be removed next "
-        f"release.",
-        DeprecationWarning, stacklevel=stacklevel)
-    return mapped
+    get_registry().inc("tick_impl.resolved",
+                       help="tick_impl resolutions by resolved name",
+                       impl=impl.name, requested=requested)
+    return impl

@@ -1,0 +1,18 @@
+"""``repro.obs`` — the unified telemetry layer (ISSUE 8).
+
+- :mod:`repro.obs.metrics`: labeled Counter/Gauge/Histogram registry
+  with process-safe snapshot/merge and Prometheus/JSON exporters.
+- :mod:`repro.obs.trace`: span-based tracing emitting Chrome
+  trace-event JSON (Perfetto-loadable), with an optional
+  ``jax.profiler`` hook.
+
+Both modules are jax-free at import time; see ``docs/observability.md``
+for the metric catalogue and trace-span map.
+"""
+
+from repro.obs.logs import setup_logging
+from repro.obs.metrics import MetricsRegistry, get_registry
+from repro.obs.trace import Tracer, get_tracer, jax_device_profile
+
+__all__ = ["MetricsRegistry", "get_registry", "Tracer", "get_tracer",
+           "jax_device_profile", "setup_logging"]

@@ -1,0 +1,46 @@
+"""CLI logging setup with run-id correlation (ISSUE 8).
+
+The scripts' operational chatter (sweep headers, per-config progress,
+cache status) goes through stdlib ``logging`` so it carries a timestamp,
+a level, and the run id that also tags every trace span — results and
+tables still print to stdout. ``setup_logging`` is the one entry point:
+it configures the root handler once, returns the run id it correlated,
+and aligns the global tracer's ``run_id`` so ``--trace-out`` events and
+log lines cross-reference.
+"""
+
+from __future__ import annotations
+
+import logging
+import sys
+import uuid
+from typing import Optional
+
+from repro.obs.trace import get_tracer
+
+#: ``--log-level`` choices, lowercase (argparse-friendly).
+LOG_LEVELS = ("debug", "info", "warning", "error")
+
+
+def setup_logging(level: str = "info",
+                  run_id: Optional[str] = None) -> str:
+    """Configure root logging for a CLI run; returns the run id.
+
+    The format embeds the run id, so piped/teed logs from several runs
+    stay attributable; the same id is pushed into the global tracer for
+    span correlation. Idempotent per process (reconfigures handlers on
+    repeat calls rather than stacking them).
+    """
+    rid = run_id or uuid.uuid4().hex[:8]
+    logging.basicConfig(
+        level=getattr(logging, level.upper()),
+        format=f"%(asctime)s %(levelname)s [{rid}] %(name)s: %(message)s",
+        datefmt="%H:%M:%S",
+        stream=sys.stderr,
+        force=True,
+    )
+    get_tracer().run_id = rid
+    return rid
+
+
+__all__ = ["LOG_LEVELS", "setup_logging"]

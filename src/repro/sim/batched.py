@@ -65,20 +65,18 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import TYPE_CHECKING, Callable, List, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import lane_tick
-from repro.kernels.registry import (
-    UNSET,
-    TickImpl,
-    resolve_tick_impl,
-    tick_impl_from_use_pallas,
-)
+from repro.kernels.registry import TickImpl, resolve_tick_impl
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer
 from repro.sim.cloud import bills_from_monthly_totals
+from repro.sim.output import TimeSeries
 from repro.sim.sweep import ScenarioResult, SweepResult
 
 if TYPE_CHECKING:  # repro.core imports repro.sim; keep runtime acyclic
@@ -110,8 +108,25 @@ _INF = jnp.float32(jnp.inf)
 _NEG_INF = jnp.float32(-jnp.inf)
 _BIG_TICKET = jnp.int32(2 ** 30)
 
+#: Per-site link-type order of the captured link-activity series (the
+#: ``3 * site + type`` link-id layout).
+LINK_TYPES = ("tape_to_disk", "gcs_to_disk", "disk_to_gcs")
 
-def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl):
+
+def _normalize_record(record_series, n_ticks: int):
+    """Normalize a ``record_series=`` argument to ``(stride, n_samples)``
+    (or ``None`` when capture is off). ``True`` samples every tick; an
+    int samples every that-many ticks (tick 0 always sampled)."""
+    if record_series is None or record_series is False:
+        return None
+    stride = 1 if record_series is True else int(record_series)
+    if stride < 1:
+        raise ValueError(f"record_series must be >= 1, got {record_series!r}")
+    return stride, (n_ticks - 1) // stride + 1
+
+
+def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl,
+                   record=None):
     """Build the per-lane tick body and post-scan reduction (closures over
     the static dimensions and the resolved tick implementation).
 
@@ -144,6 +159,16 @@ def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl):
     integration) and the K/W candidate-window recurrences run as the
     fused ``repro.kernels.lane_tick`` Pallas kernels; the surrounding
     scatter/bookkeeping program is shared between implementations.
+
+    ``record`` (``(stride, n_samples)`` or ``None``) turns on per-tick
+    series capture: ring buffers sized ``[n_samples + 1, ...]`` ride in
+    the scan carry and every tick writes its end-of-tick observables —
+    disk/GCS occupancy, waiting-queue depth, running jobs, per-link
+    active transfers — at ``t // stride`` when ``t`` is a sample tick
+    and into the final *trash slot* otherwise (dropped by ``post_fn``),
+    so the per-tick cost stays O(S) and memory O(n_samples * S) per
+    lane. With ``record=None`` the carry, the traced program, and the
+    results are byte-for-byte the pre-capture ones.
     """
     use_kernel = impl.use_kernel
     interpret = impl.interpret
@@ -550,6 +575,27 @@ def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl):
         else:
             st["gbsec_mo"] = st["gbsec_mo"].at[month].add(
                 st["gcs_used"] / 1e9 * dt)
+
+        # -- opt-in series capture (end-of-tick observables) --------------
+        if record is not None:
+            stride, n_samples = record
+            idx = jnp.where(t % stride == 0, t // stride,
+                            jnp.int32(n_samples))
+            queue = jnp.sum(st["wq_wait"], axis=1).astype(jnp.float32)
+            running = jnp.sum(
+                (st["job_ready"] < _INF)
+                & (st["job_ready"] + job_tail > now),
+                axis=1).astype(jnp.float32)
+            active3 = jnp.sum(
+                st["tr_slot"].astype(jnp.float32)[:, :, None]
+                * ((st["tr_link"] % 3)[:, :, None]
+                   == jnp.arange(3, dtype=jnp.int32)), axis=1)  # [S, 3]
+            upd = jax.lax.dynamic_update_index_in_dim
+            st["ser_disk"] = upd(st["ser_disk"], st["disk_used"], idx, 0)
+            st["ser_gcs"] = upd(st["ser_gcs"], st["gcs_used"], idx, 0)
+            st["ser_queue"] = upd(st["ser_queue"], queue, idx, 0)
+            st["ser_run"] = upd(st["ser_run"], running, idx, 0)
+            st["ser_link"] = upd(st["ser_link"], active3, idx, 0)
         return st, None
 
     def post_fn(st, lane, horizon):
@@ -558,7 +604,14 @@ def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl):
         done = ready & (st["job_ready"] + job_tail <= horizon)
         job_sizes = jnp.take_along_axis(sizes, job_fid, axis=1)
         wait_h = (st["job_ready"] - job_submit_time) / 3600.0
+        series = {}
+        if record is not None:
+            n_samples = record[1]  # drop the trash slot
+            series = {k: st[k][:n_samples]
+                      for k in ("ser_disk", "ser_gcs", "ser_queue",
+                                "ser_run", "ser_link")}
         return {
+            **series,
             "jobs_done_site": jnp.sum(done, axis=1),
             "download_b": jnp.sum(job_sizes * ready, axis=1),
             "wait_h_sum": jnp.sum(jnp.where(ready, wait_h, 0.0)),
@@ -578,13 +631,16 @@ def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl):
 
 
 @functools.lru_cache(maxsize=16)
-def _grid_program(S: int, K: int, n_months: int, impl_name: str):
-    """The jitted lane-vmapped simulation (cached per static shape family
-    and concrete ``tick_impl`` name; XLA additionally retraces per
-    concrete array shape — ``pack_specs``'s K/J power-of-two bucketing
-    and ``lane_chunk`` keep those shapes stable across grids)."""
+def _grid_program(S: int, K: int, n_months: int, impl_name: str,
+                  record=None):
+    """The jitted lane-vmapped simulation (cached per static shape family,
+    concrete ``tick_impl`` name, and series-capture configuration; XLA
+    additionally retraces per concrete array shape — ``pack_specs``'s
+    K/J power-of-two bucketing and ``lane_chunk`` keep those shapes
+    stable across grids)."""
     tick_fn, post_fn = _lane_step_fns(S, K, n_months,
-                                      resolve_tick_impl(impl_name))
+                                      resolve_tick_impl(impl_name),
+                                      record=record)
 
     def lane_sim(times, dts, month_idx, t_idx, horizon,
                  disk_limit, gcs_enabled, gcs_limit, min_pop,
@@ -627,6 +683,15 @@ def _grid_program(S: int, K: int, n_months: int, impl_name: str):
             cls_b_mo=jnp.zeros((n_months,), jnp.float32),
             gbsec_mo=jnp.zeros((n_months,), jnp.float32),
         )
+        if record is not None:
+            n_samples = record[1]  # +1 = the non-sample-tick trash slot
+            init.update(
+                ser_disk=jnp.zeros((n_samples + 1, S), jnp.float32),
+                ser_gcs=jnp.zeros((n_samples + 1,), jnp.float32),
+                ser_queue=jnp.zeros((n_samples + 1, S), jnp.float32),
+                ser_run=jnp.zeros((n_samples + 1, S), jnp.float32),
+                ser_link=jnp.zeros((n_samples + 1, S, 3), jnp.float32),
+            )
         final, _ = jax.lax.scan(
             lambda c, xs: tick_fn(c, xs, const), init,
             (times, dts, month_idx, t_idx, jobs_per_tick))
@@ -649,14 +714,17 @@ _LANE_FIELDS = ("disk_limit", "gcs_enabled", "gcs_limit", "min_migrate_pop",
 def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
                     lane_chunk: Optional[int] = None,
                     devices: Optional[Sequence] = None,
-                    use_pallas=UNSET):
+                    record_series=None):
     """Run a packed grid on device; returns the raw per-lane aggregate dict
     (numpy arrays, lane-leading).
 
     ``tick_impl`` selects the tick-engine implementation
     (``repro.kernels.registry``): ``"jnp"`` | ``"pallas"`` |
     ``"pallas_interpret"`` | ``"auto"`` (compiled Pallas on an
-    accelerator, jnp on CPU — never silently interpret mode).
+    accelerator, jnp on CPU — never silently interpret mode). The
+    pre-registry ``use_pallas=``/``interpret=`` aliases are gone; a
+    boolean landing in the ``tick_impl`` slot raises with the upgrade
+    hint (``resolve_tick_impl``).
 
     ``lane_chunk`` bounds device memory: lanes execute in fixed-size
     chunks (the last chunk padded by replicating its final lane; padded
@@ -665,19 +733,16 @@ def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
     never interact. ``devices`` (default: all local devices) receives the
     chunks round-robin when more than one is present.
 
-    ``use_pallas=`` is a deprecated alias for ``tick_impl`` (one release,
-    ``DeprecationWarning``); it overrides ``tick_impl`` when given. A
-    boolean arriving in the ``tick_impl`` slot — a legacy *positional*
-    ``use_pallas`` call, since ``tick_impl`` reuses that slot — is
-    routed through the same alias shim rather than rejected.
+    ``record_series`` (``True`` = sample every tick, an int = sample
+    stride in ticks, default off) adds the end-of-tick series buffers to
+    the result — ``ser_disk``/``ser_queue``/``ser_run`` ``[L, T_sample,
+    S]``, ``ser_gcs`` ``[L, T_sample]``, ``ser_link`` ``[L, T_sample,
+    S, 3]`` — at O(T_sample * S) device memory per lane; convert with
+    ``series_from_capture``. Capture off traces the exact pre-capture
+    program, so those results stay bitwise identical.
     """
-    if use_pallas is not UNSET:
-        tick_impl = tick_impl_from_use_pallas(
-            use_pallas, where="simulate_packed")
-    elif isinstance(tick_impl, bool):
-        tick_impl = tick_impl_from_use_pallas(
-            tick_impl, where="simulate_packed")
     impl = resolve_tick_impl(tick_impl)
+    record = _normalize_record(record_series, grid.n_ticks)
     if lane_chunk is not None and lane_chunk <= 0:
         raise ValueError(f"lane_chunk must be > 0, got {lane_chunk!r}")
     devices = list(devices) if devices is not None else jax.local_devices()
@@ -687,8 +752,9 @@ def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
     if lane_chunk is None and len(devices) > 1:
         lane_chunk = -(-L // len(devices))  # spread one chunk per device
 
+    tracer = get_tracer()
     program = _grid_program(len(grid.site_names), grid.max_jobs_per_tick,
-                            grid.n_months, impl.name)
+                            grid.n_months, impl.name, record)
     T = grid.n_ticks
     shared = (np.asarray(grid.times), np.asarray(grid.dts),
               np.asarray(grid.month_idx), np.arange(T, dtype=np.int32),
@@ -696,8 +762,10 @@ def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
     lanes = [np.asarray(getattr(grid, name)) for name in _LANE_FIELDS]
 
     if lane_chunk is None or lane_chunk >= L:
-        out = program(*shared, *lanes)
-        return {k: np.asarray(v) for k, v in out.items()}
+        with tracer.span("simulate_packed", lanes=L, ticks=T,
+                         tick_impl=impl.name, chunks=1):
+            out = program(*shared, *lanes)
+            return {k: np.asarray(v) for k, v in out.items()}
 
     C = int(lane_chunk)
     chunk_outs = []
@@ -709,14 +777,16 @@ def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
             chunk = [np.concatenate([a] + [a[-1:]] * pad, axis=0)
                      for a in chunk]
         dev = devices[ci % len(devices)]
-        if len(devices) > 1:
-            # commit every argument so each chunk dispatches (and can
-            # execute concurrently) on its own device
-            args = [jax.device_put(a, dev)
-                    for a in (*shared, *chunk)]
-            chunk_outs.append(program(*args))
-        else:
-            chunk_outs.append(program(*shared, *chunk))
+        with tracer.span("simulate_packed.chunk", chunk=ci,
+                         lanes=stop - start, tick_impl=impl.name):
+            if len(devices) > 1:
+                # commit every argument so each chunk dispatches (and can
+                # execute concurrently) on its own device
+                args = [jax.device_put(a, dev)
+                        for a in (*shared, *chunk)]
+                chunk_outs.append(program(*args))
+            else:
+                chunk_outs.append(program(*shared, *chunk))
     out = {k: np.concatenate([np.asarray(o[k]) for o in chunk_outs],
                              axis=0)[:L]
            for k in chunk_outs[0]}
@@ -776,12 +846,54 @@ def _lane_result(grid: "PackedGrid", out: dict, si: int,
     )
 
 
+def series_from_capture(grid: "PackedGrid", out: Dict[str, np.ndarray],
+                        si: int, record_series) -> Dict[str, "TimeSeries"]:
+    """Convert one spec's on-device series buffers to ``TimeSeries``.
+
+    ``out`` must come from a ``simulate_packed(..., record_series=...)``
+    call with the *same* ``record_series`` value. Names match the event
+    engine's ``OutputCollector`` where both backends record the
+    observable — ``"{site}.disk_used"``, ``"gcs_used"``,
+    ``"{site}.running_jobs"`` — plus JAX-only series:
+    ``"{site}.wait_queue"`` (distinct files with waiting jobs) and
+    ``"{site}.link_active.{tape_to_disk,gcs_to_disk,disk_to_gcs}"``
+    (transfer slots active on each link type).
+    """
+    record = _normalize_record(record_series, grid.n_ticks)
+    if record is None:
+        raise ValueError(
+            "series_from_capture requires the record_series value the "
+            f"grid was simulated with, got {record_series!r}")
+    if "ser_disk" not in out:
+        raise KeyError(
+            "no series buffers in this result — was simulate_packed "
+            "called with record_series on?")
+    stride, _ = record
+    li = int(grid.lane_of[si])
+    times = [float(t) for t in np.asarray(grid.times)[::stride]]
+
+    series: Dict[str, TimeSeries] = {}
+
+    def add(name: str, values: np.ndarray) -> None:
+        series[name] = TimeSeries(name, times=list(times),
+                                  values=[float(v) for v in values])
+
+    add("gcs_used", out["ser_gcs"][li])
+    for s, name in enumerate(grid.site_names):
+        add(f"{name}.disk_used", out["ser_disk"][li, :, s])
+        add(f"{name}.running_jobs", out["ser_run"][li, :, s])
+        add(f"{name}.wait_queue", out["ser_queue"][li, :, s])
+        for k, link in enumerate(LINK_TYPES):
+            add(f"{name}.link_active.{link}", out["ser_link"][li, :, s, k])
+    return series
+
+
 def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
                   progress: Optional[Callable] = None,
                   tick_impl: str = "auto",
                   lane_chunk: Optional[int] = None,
                   devices: Optional[Sequence] = None,
-                  use_pallas=UNSET) -> SweepResult:
+                  record_series=None) -> SweepResult:
     """Execute a spec grid as one batched on-device program.
 
     Returns a ``SweepResult`` interchangeable with the process backend's
@@ -793,29 +905,39 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
     ``tick`` is the clock-step *duration* in seconds; ``tick_impl``
     selects the kernel *implementation* (see ``simulate_packed`` /
     ``repro.kernels.registry``) — independent axes despite the shared
-    prefix. ``use_pallas=`` is the deprecated alias for ``tick_impl``; a
-    boolean in the ``tick_impl`` slot (a legacy positional ``use_pallas``
-    call — ``tick_impl`` reuses that slot) routes through the same shim.
+    prefix.
 
     ``lane_chunk``/``devices``: see ``simulate_packed`` — bounded-memory
     chunked execution with optional multi-device round-robin.
+    ``record_series`` turns on per-tick series capture (``True`` or a
+    sample stride in ticks); each result then carries the same summary
+    digests in ``.series`` that the process backend reports.
     """
     from repro.core.scenarios import pack_specs
 
-    if use_pallas is not UNSET:
-        tick_impl = tick_impl_from_use_pallas(
-            use_pallas, where="run_sweep_jax")
-    elif isinstance(tick_impl, bool):
-        tick_impl = tick_impl_from_use_pallas(
-            tick_impl, where="run_sweep_jax")
+    tracer = get_tracer()
     t0 = time.perf_counter()
-    grid = pack_specs(specs, tick=tick)
+    with tracer.span("pack_specs", n_specs=len(specs)):
+        grid = pack_specs(specs, tick=tick)
     out = simulate_packed(grid, tick_impl=tick_impl,
-                          lane_chunk=lane_chunk, devices=devices)
+                          lane_chunk=lane_chunk, devices=devices,
+                          record_series=record_series)
     wall = time.perf_counter() - t0
+    reg = get_registry()
+    reg.inc("sweep.jax.runs", help="Batched JAX sweep invocations")
+    reg.inc("sweep.jax.lanes", grid.n_lanes,
+            help="Dynamics lanes simulated on device")
+    reg.observe("sweep.jax.wall_s", wall,
+                help="Batched JAX sweep wall time (s)")
+    capture = _normalize_record(record_series, grid.n_ticks) is not None
     results: List[ScenarioResult] = []
     for si in range(grid.n_specs):
-        results.append(_lane_result(grid, out, si, wall / grid.n_specs))
+        r = _lane_result(grid, out, si, wall / grid.n_specs)
+        if capture:
+            r.series = {name: ts.summary() for name, ts in
+                        series_from_capture(grid, out, si,
+                                            record_series).items()}
+        results.append(r)
         if progress is not None:
             progress(si + 1, grid.n_specs, results[-1])
     return SweepResult(results=results, wall_s=wall)

@@ -52,6 +52,8 @@ import numpy as np
 from typing import (TYPE_CHECKING, Any, Dict, Iterable, Iterator, List,
                     Optional, Protocol, Tuple, Union, runtime_checkable)
 
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer
 from repro.sim.cloud import bills_from_monthly_totals
 from repro.sim.sweep import ScenarioResult
 from repro.version import __version__
@@ -292,23 +294,32 @@ class ResultCache:
 
         key = cache_key(spec, backend=backend, tick=tick,
                         tick_impl=tick_impl)
-        data = self.backend.read(entry_name(key))
-        if data is None:
-            self.stats.misses += 1
-            return None
-        try:
-            doc = _validate_entry(json.loads(data.decode("utf-8")))
-            result = _serve(spec, doc["payload"])
-        except Exception:
-            # Truncated/garbage JSON, wrong schema version, structural rot:
-            # never crash, never serve bad data — drop the entry and let
-            # the caller recompute (whose put() rewrites a valid one).
-            self.stats.corrupt += 1
-            self.stats.misses += 1
-            self.backend.delete(entry_name(key))
-            return None
-        self.stats.hits += 1
-        return result
+        reg = get_registry()
+        with get_tracer().span("cache.get", key=key[:12]):
+            data = self.backend.read(entry_name(key))
+            if data is None:
+                self.stats.misses += 1
+                reg.inc("cache.misses", help="Result-cache lookup misses")
+                return None
+            try:
+                doc = _validate_entry(json.loads(data.decode("utf-8")))
+                with get_tracer().span("cache.rebill", key=key[:12]):
+                    result = _serve(spec, doc["payload"])
+            except Exception:
+                # Truncated/garbage JSON, wrong schema version, structural
+                # rot: never crash, never serve bad data — drop the entry
+                # and let the caller recompute (whose put() rewrites a
+                # valid one).
+                self.stats.corrupt += 1
+                self.stats.misses += 1
+                reg.inc("cache.corrupt",
+                        help="Result-cache entries dropped as invalid")
+                reg.inc("cache.misses", help="Result-cache lookup misses")
+                self.backend.delete(entry_name(key))
+                return None
+            self.stats.hits += 1
+            reg.inc("cache.hits", help="Result-cache lookup hits")
+            return result
 
     def put(self, spec: "ScenarioSpec", result: ScenarioResult,
             backend: str = "process", tick: Optional[float] = None,
@@ -398,9 +409,12 @@ class ResultCache:
                 "series": result.series,
             },
         }
-        self.backend.write(entry_name(key),
-                           json.dumps(doc).encode("utf-8"))
+        with get_tracer().span("cache.put", key=key[:12]):
+            self.backend.write(entry_name(key),
+                               json.dumps(doc).encode("utf-8"))
         self.stats.writes += 1
+        get_registry().inc("cache.writes",
+                           help="Result-cache entries written")
 
 
 def as_cache(cache: Union["ResultCache", StorageBackend, str, os.PathLike,

@@ -56,6 +56,8 @@ from repro.core.scenarios import (
     with_axis,
     with_seeds,
 )
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer
 from repro.sim.infrastructure import TB
 from repro.sim.sweep import ScenarioResult, SweepResult
 
@@ -381,9 +383,11 @@ def refine_frontier(axes: Mapping[str, Any], evaluate: Evaluate,
             if lanes and len(lanes) + would > lane_budget:
                 budget_hit = True
                 break
-        n_lanes = run_batch(pending) if pending else 0
-        points = summarize(list(results.values()), z)
-        frontier = ci_frontier(points, cost_of)
+        with get_tracer().span("refine.round", round=i,
+                               new_specs=len(pending)):
+            n_lanes = run_batch(pending) if pending else 0
+            points = summarize(list(results.values()), z)
+            frontier = ci_frontier(points, cost_of)
         rounds.append(RefineRound(index=i, new_specs=len(pending),
                                   new_lanes=n_lanes,
                                   frontier_size=len(frontier)))
@@ -861,19 +865,21 @@ def decide(axes: Mapping[str, Any], evaluate: Evaluate, *,
     # cloud bill, but bigger caches still buy more on-prem disk — total
     # cost separates them and points the refinement at the knee.
     cost_of = onprem.total_interval
-    ref = refine_frontier(axes, evaluate, refine, n_seeds=n_seeds,
-                          first_seed=first_seed, rel_tol=rel_tol,
-                          max_rounds=max_rounds, lane_budget=lane_budget,
-                          cost_of=cost_of, z=z)
+    with get_tracer().span("decide.refine_frontier"):
+        ref = refine_frontier(axes, evaluate, refine, n_seeds=n_seeds,
+                              first_seed=first_seed, rel_tol=rel_tol,
+                              max_rounds=max_rounds, lane_budget=lane_budget,
+                              cost_of=cost_of, z=z)
 
     matching = [p for p in ref.frontier if p.jobs.hi >= base_point.jobs.lo]
     pool = matching or ref.frontier
     chosen = min(pool, key=onprem.total_usd) if pool else None
 
     if chosen is not None:
-        disp = solve_displaced_disk(
-            chosen.spec, base_point, evaluate, onprem, lo=cache_floor,
-            n_seeds=n_seeds, first_seed=first_seed, z=z)
+        with get_tracer().span("decide.displaced_disk"):
+            disp = solve_displaced_disk(
+                chosen.spec, base_point, evaluate, onprem, lo=cache_floor,
+                n_seeds=n_seeds, first_seed=first_seed, z=z)
     else:
         disp = DisplacedDisk(min_cache_tb=None, candidate=None,
                              baseline_provisioned_tb=onprem.provisioned_tb(
@@ -888,10 +894,12 @@ def decide(axes: Mapping[str, Any], evaluate: Evaluate, *,
     # under-delivers the baseline's throughput is not a break-even
     if breakeven_axis is not None and disp.min_cache_tb is not None:
         lo, hi = breakeven_range
-        breakeven = solve_break_even_price(
-            disp.candidate.spec, base_point, evaluate, onprem,
-            axis=breakeven_axis, lo=lo, hi=hi, n_seeds=n_seeds,
-            first_seed=first_seed, z=z)
+        with get_tracer().span("decide.break_even",
+                               axis=str(breakeven_axis)):
+            breakeven = solve_break_even_price(
+                disp.candidate.spec, base_point, evaluate, onprem,
+                axis=breakeven_axis, lo=lo, hi=hi, n_seeds=n_seeds,
+                first_seed=first_seed, z=z)
 
     pool = {p.spec: p for p in ref.points + disp.probes}  # dedupe re-probes
     frontier = ci_frontier(list(pool.values()), cost_of)
@@ -914,4 +922,8 @@ def decide(axes: Mapping[str, Any], evaluate: Evaluate, *,
     cache_stats = getattr(cache, "stats", None)
     if cache_stats is not None and hasattr(cache_stats, "as_dict"):
         report.stats["cache"] = cache_stats.as_dict()
+    # Embed the process-global metrics snapshot: the report is the
+    # decision workflow's one artifact, so its operational story (cache
+    # warmth, lanes simulated, kernel resolution) travels with it.
+    report.stats["metrics"] = get_registry().snapshot()
     return report

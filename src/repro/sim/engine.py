@@ -19,6 +19,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.obs.metrics import get_registry
+
 SECOND = 1
 MINUTE = 60 * SECOND
 HOUR = 60 * MINUTE
@@ -91,6 +93,7 @@ class BaseSimulation:
     def run(self, until: int) -> None:
         """Run the event loop until the clock passes ``until`` (seconds)."""
         self._stop_time = int(until)
+        executed_before = self.events_executed
         heap = self._heap
         while heap and heap[0].time <= self._stop_time:
             now = heap[0].time
@@ -106,6 +109,11 @@ class BaseSimulation:
                 if ev.interval is not None and not ev.cancelled:
                     self.schedule(ev, now + ev.interval)
         self.now = self._stop_time
+        # One delta increment per run() call, not per event — the loop
+        # body stays registry-free.
+        get_registry().inc("engine.events",
+                           self.events_executed - executed_before,
+                           help="Event-loop pops executed")
 
     def pending_events(self) -> int:
         return sum(1 for e in self._heap if not e.event.cancelled)

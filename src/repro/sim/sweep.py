@@ -30,6 +30,8 @@ from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence
 
+from repro.obs.metrics import get_registry, snapshot_and_reset
+from repro.obs.trace import get_tracer
 from repro.sim.cloud import sum_bills
 from repro.sim.output import mean_and_error, write_csv
 
@@ -108,6 +110,9 @@ def _worker_init() -> None:
     overridden: workers only ever need numpy, so CPU is always right.
     """
     os.environ["JAX_PLATFORMS"] = "cpu"
+    # Fresh baseline for the worker's process-global metrics registry so
+    # the per-task snapshot deltas it returns contain only its own work.
+    get_registry().reset()
 
 
 def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
@@ -124,9 +129,14 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
 
     cfg = build_config(spec)
     t0 = time.perf_counter()
-    scenario = HCDCScenario(cfg)
-    metrics = scenario.run()
+    with get_tracer().span("run_scenario", label=spec.label):
+        scenario = HCDCScenario(cfg)
+        metrics = scenario.run()
     wall = time.perf_counter() - t0
+    reg = get_registry()
+    reg.inc("scenario.runs", help="Event-engine scenario executions")
+    reg.observe("scenario.wall_s", wall,
+                help="Per-scenario event-engine wall time (s)")
     bill = sum_bills(scenario.gcs.bills)
     series = {name: ts.summary() for name, ts in scenario.out.series.items()}
     raw = scenario.gcs.monthly_raw
@@ -148,6 +158,15 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
         series=series,
         monthly=monthly,
     )
+
+
+def _run_scenario_with_metrics(spec: ScenarioSpec):
+    """Pool-worker task: the result plus the worker registry's snapshot
+    delta (snapshot-then-reset), so the parent can ``merge`` it and a
+    parallel sweep's metrics match a serial run's. Top-level for pickling.
+    """
+    result = run_scenario(spec)
+    return result, snapshot_and_reset()
 
 
 def pareto_indices(costs: Sequence[float],
@@ -186,9 +205,18 @@ class SweepResult:
     def __len__(self) -> int:
         return len(self.results)
 
+    #: Below this wall-clock floor a throughput rate is noise, not signal.
+    WALL_S_FLOOR = 1e-3
+
     @property
-    def configs_per_sec(self) -> float:
-        return len(self.results) / self.wall_s if self.wall_s > 0 else 0.0
+    def configs_per_sec(self) -> Optional[float]:
+        """Throughput, or ``None`` when ``wall_s`` is under the 1 ms
+        floor — a fully cache-warm (or empty) sweep finishes in
+        microseconds, and dividing by that produces a meaningless
+        6-digit "rate"."""
+        if self.wall_s < self.WALL_S_FLOOR:
+            return None
+        return len(self.results) / self.wall_s
 
     # -- frontier ------------------------------------------------------------
     def pareto_front(self) -> List[ScenarioResult]:
@@ -237,12 +265,13 @@ class SweepResult:
     def to_json(self, path: str) -> None:
         doc = {
             "wall_s": self.wall_s,
-            "configs_per_sec": self.configs_per_sec,
             "rows": self.rows(),
             "pareto": [r.spec.label for r in self.pareto_front()],
             "series": {r.spec.label: r.series
                        for r in self.results if r.series},
         }
+        if self.configs_per_sec is not None:
+            doc["configs_per_sec"] = self.configs_per_sec
         if os.path.dirname(path):
             os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(path, "w") as f:
@@ -255,7 +284,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
               tick: float = 10.0, tick_impl: str = "auto",
               lane_chunk: Optional[int] = None,
               devices: Optional[Sequence[Any]] = None,
-              cache: Optional[Any] = None) -> SweepResult:
+              cache: Optional[Any] = None,
+              record_series=None) -> SweepResult:
     """Execute every spec; results keep the input order.
 
     ``backend`` selects the execution engine:
@@ -294,9 +324,19 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
     keying, so entries from different kernel implementations never
     cross-serve (``"jnp"`` keeps the legacy key: it is bitwise the
     pre-registry engine).
+
+    ``record_series`` (jax backend only): per-tick series capture —
+    ``True`` samples every tick, an int is the sample stride in ticks;
+    each result then carries the event-engine-schema summary digests in
+    ``.series`` (see ``repro.sim.batched.series_from_capture``). The
+    process backend records series via ``spec.curves`` instead.
     """
     if backend != "jax" and tick_impl != "auto":
         raise ValueError("tick_impl applies to backend='jax' only")
+    if backend != "jax" and record_series not in (None, False):
+        raise ValueError("record_series applies to backend='jax' only "
+                         "(the process backend records curves via "
+                         "spec.curves)")
     impl_name: Optional[str] = None
     if backend == "jax":
         from repro.kernels.registry import resolve_tick_impl
@@ -317,7 +357,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
             res = run_sweep(miss, workers=workers, progress=progress,
                             backend=backend, tick=tick,
                             tick_impl=impl_name or "auto",
-                            lane_chunk=lane_chunk, devices=devices)
+                            lane_chunk=lane_chunk, devices=devices,
+                            record_series=record_series)
             computed = dict(zip(miss, res.results))
             cache.store(computed.items(), backend=backend, tick=tick,
                         tick_impl=impl_name)
@@ -332,7 +373,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
 
         return run_sweep_jax(specs, tick=tick, progress=progress,
                              tick_impl=impl_name,
-                             lane_chunk=lane_chunk, devices=devices)
+                             lane_chunk=lane_chunk, devices=devices,
+                             record_series=record_series)
     if lane_chunk is not None or devices is not None:
         raise ValueError("lane_chunk/devices apply to backend='jax' only")
     if backend != "process":
@@ -353,14 +395,16 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
         # make forked children deadlock-prone; the sweep worker itself only
         # needs numpy, so spawn startup stays cheap.
         ctx = multiprocessing.get_context("spawn")
+        reg = get_registry()
         with ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
                                  initializer=_worker_init) as pool:
-            futures = {pool.submit(run_scenario, s): i
+            futures = {pool.submit(_run_scenario_with_metrics, s): i
                        for i, s in enumerate(specs)}
             done = 0
             for fut in as_completed(futures):
                 i = futures[fut]
-                results[i] = fut.result()
+                results[i], worker_snap = fut.result()
+                reg.merge(worker_snap)
                 done += 1
                 if progress is not None:
                     progress(done, len(specs), results[i])
@@ -406,12 +450,16 @@ class SweepDriver:
                  devices: Optional[Sequence[Any]] = None,
                  progress: Optional[Callable[[int, int, ScenarioResult],
                                              None]] = None,
-                 cache: Optional[Any] = None):
+                 cache: Optional[Any] = None,
+                 record_series=None):
         if backend != "jax" and tick_impl != "auto":
             raise ValueError("tick_impl applies to backend='jax' only")
+        if backend != "jax" and record_series not in (None, False):
+            raise ValueError("record_series applies to backend='jax' only")
         self.backend = backend
         self.tick = tick
         self.tick_impl = tick_impl
+        self.record_series = record_series
         #: resolved lazily on first run (importing jax to resolve
         #: ``"auto"`` is deferred until the jax backend actually runs)
         self._impl_name: Optional[str] = None
@@ -473,7 +521,8 @@ class SweepDriver:
                             tick=self.tick,
                             tick_impl=self._resolved_impl() or "auto",
                             lane_chunk=self.lane_chunk,
-                            devices=self.devices)
+                            devices=self.devices,
+                            record_series=self.record_series)
             self.sweep_calls += 1
             self.configs_run += len(new)
             self.wall_s += res.wall_s
@@ -484,6 +533,16 @@ class SweepDriver:
                 self.cache.store(zip(new, res.results),
                                  backend=self.backend, tick=self.tick,
                                  tick_impl=self._resolved_impl())
+        reg = get_registry()
+        reg.set_gauge("lanes.simulated", self.lanes_simulated,
+                      help="Distinct dynamics lanes simulated by the "
+                           "driver (0 = fully cache-warm)")
+        reg.set_gauge("configs.run", self.configs_run,
+                      help="Specs actually executed by the driver")
+        reg.set_gauge("sweep.calls", self.sweep_calls,
+                      help="run_sweep invocations issued by the driver")
+        reg.set_gauge("sweep.wall_s", self.wall_s,
+                      help="Cumulative driver simulation wall time (s)")
         return SweepResult(results=[self._memo[s] for s in specs],
                            wall_s=time.perf_counter() - t0,
                            lanes_simulated=len(self._lane_keys) - lanes_before,

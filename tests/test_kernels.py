@@ -94,56 +94,54 @@ def test_tick_impl_unknown_name_rejected():
     assert TICK_IMPL_CHOICES[0] == "auto"
 
 
-def test_tick_impl_boolean_rejected_with_alias_pointer():
+def test_tick_impl_boolean_rejected_with_upgrade_pointer(monkeypatch):
     """A bool in the tick_impl slot (a legacy positional use_pallas
-    call) gets a pointer at the deprecated alias, not a bare KeyError."""
-    from repro.kernels.registry import resolve_tick_impl
-
-    for legacy in (True, False):
-        with pytest.raises(ValueError, match="use_pallas"):
-            resolve_tick_impl(legacy)
-
-
-def test_use_pallas_true_maps_to_interpret_on_every_host(monkeypatch):
-    """The deprecated flag preserves its literal old numerics: the
-    pre-registry code hardcoded interpret=True everywhere, so True maps
-    to 'pallas_interpret' even on accelerators — and the mapping never
-    probes the platform (stays jax-free)."""
+    call) gets a pointer at the removed flag and the tick_impl= upgrade
+    path, not a bare KeyError — and the rejection never probes the
+    platform (stays jax-free)."""
     from repro.kernels import registry
 
     def boom():
-        raise AssertionError("the legacy mapping must not probe the "
+        raise AssertionError("boolean rejection must not probe the "
                              "platform")
 
     monkeypatch.setattr(registry, "_platform", boom)
-    expected = {True: "pallas_interpret", False: "jnp", None: "auto"}
-    for legacy, want in expected.items():
-        with pytest.warns(DeprecationWarning, match="use_pallas"):
-            assert registry.tick_impl_from_use_pallas(
-                legacy, where="test") == want
+    for legacy in (True, False):
+        with pytest.raises(ValueError, match="use_pallas"):
+            registry.resolve_tick_impl(legacy)
+    assert not hasattr(registry, "tick_impl_from_use_pallas")
 
 
-def test_carousel_tick_use_pallas_deprecated():
-    """The legacy boolean still works (one release) but warns, and maps
-    onto the same implementations as the tick_impl axis."""
+def test_tick_impl_resolution_counted():
+    """Every resolve lands one labeled tick_impl.resolved increment."""
+    from repro.kernels.registry import resolve_tick_impl
+    from repro.obs.metrics import get_registry
+
+    reg = get_registry()
+    before = reg.value("tick_impl.resolved", impl="jnp", requested="jnp")
+    resolve_tick_impl("jnp")
+    assert reg.value("tick_impl.resolved", impl="jnp",
+                     requested="jnp") == before + 1
+
+
+def test_carousel_tick_use_pallas_removed():
+    """The legacy keyword is gone from carousel_tick; tick_impl= is the
+    only selection axis."""
     link_id = jnp.asarray([0, 1], jnp.int32)
     active = jnp.asarray([True, True])
     done = jnp.zeros(2, jnp.float32)
     total = jnp.asarray([50.0, 50.0])
     bw = jnp.asarray([10.0, 10.0], jnp.float32)
     mode = jnp.asarray([1, 1], jnp.int32)
-    with pytest.warns(DeprecationWarning, match="carousel_tick"):
-        legacy = carousel_tick(link_id, active, done, total, bw, mode, 1.0,
-                               use_pallas=False)
+    with pytest.raises(TypeError, match="use_pallas"):
+        carousel_tick(link_id, active, done, total, bw, mode, 1.0,
+                      use_pallas=False)
     new = carousel_tick(link_id, active, done, total, bw, mode, 1.0,
                         tick_impl="jnp")
-    np.testing.assert_array_equal(np.asarray(legacy[0]), np.asarray(new[0]))
-    with pytest.warns(DeprecationWarning):
-        legacy_k = carousel_tick(link_id, active, done, total, bw, mode, 1.0,
-                                 use_pallas=True, interpret=True)
     kern = carousel_tick(link_id, active, done, total, bw, mode, 1.0,
                          tick_impl="pallas_interpret")
-    np.testing.assert_array_equal(np.asarray(legacy_k[0]), np.asarray(kern[0]))
+    np.testing.assert_allclose(np.asarray(new[0]), np.asarray(kern[0]),
+                               rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,170 @@
+"""Unit tests for the ``repro.obs`` telemetry layer (ISSUE 8)."""
+
+import json
+
+import pytest
+
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    MetricsRegistry,
+    get_registry,
+    snapshot_and_reset,
+    split_series_name,
+)
+from repro.obs.trace import Tracer, get_tracer, jax_device_profile
+
+
+# ------------------------------------------------------------------ metrics
+class TestMetricsRegistry:
+    def test_counter_inc_and_value(self):
+        r = MetricsRegistry()
+        r.inc("cache.hits")
+        r.inc("cache.hits", 2.0)
+        assert r.value("cache.hits") == 3.0
+        assert r.value("cache.misses") == 0.0  # default
+
+    def test_labels_are_sorted_into_one_series(self):
+        r = MetricsRegistry()
+        r.inc("x", b="2", a="1")
+        r.inc("x", a="1", b="2")
+        snap = r.snapshot()
+        assert snap["counters"] == {"x{a=1,b=2}": 2.0}
+
+    def test_split_series_name_round_trip(self):
+        assert split_series_name("x{a=1,b=2}") == ("x", {"a": "1",
+                                                        "b": "2"})
+        assert split_series_name("plain") == ("plain", {})
+
+    def test_gauge_last_write_wins(self):
+        r = MetricsRegistry()
+        r.set_gauge("lanes.simulated", 5)
+        r.set_gauge("lanes.simulated", 0)
+        assert r.value("lanes.simulated") == 0.0
+
+    def test_histogram_observe(self):
+        r = MetricsRegistry()
+        for v in (0.002, 0.2, 100.0):
+            r.observe("wall_s", v)
+        h = r.snapshot()["histograms"]["wall_s"]
+        assert h["count"] == 3
+        assert h["sum"] == pytest.approx(100.202)
+        assert sum(h["counts"]) == 3
+        assert h["counts"][-1] == 1  # 100.0 lands in +Inf
+        assert h["bounds"] == list(DEFAULT_BUCKETS)
+
+    def test_disabled_registry_records_nothing(self):
+        r = MetricsRegistry(enabled=False)
+        r.inc("a")
+        r.set_gauge("b", 1.0)
+        r.observe("c", 1.0)
+        snap = r.snapshot()
+        assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+
+    def test_merge_worker_delta(self):
+        """The pool round trip: worker snapshot deltas fold into the
+        parent — counters/histograms add, gauges assign."""
+        parent, worker = MetricsRegistry(), MetricsRegistry()
+        parent.inc("scenario.runs", 2)
+        parent.observe("wall_s", 1.0)
+        worker.inc("scenario.runs", 3)
+        worker.set_gauge("lanes.simulated", 7)
+        worker.observe("wall_s", 2.0)
+        delta = snapshot_and_reset(worker)
+        assert worker.snapshot()["counters"] == {}  # reset cleared it
+        parent.merge(delta)
+        assert parent.value("scenario.runs") == 5.0
+        assert parent.value("lanes.simulated") == 7.0
+        h = parent.snapshot()["histograms"]["wall_s"]
+        assert h["count"] == 2 and h["sum"] == pytest.approx(3.0)
+
+    def test_merge_into_disabled_registry_still_lands(self):
+        # merge() is bookkeeping, not new measurement: a parent that
+        # disabled collection still folds worker deltas faithfully.
+        parent = MetricsRegistry(enabled=False)
+        parent.merge({"counters": {"a": 1.0}})
+        assert parent.value("a") == 1.0
+        assert parent.enabled is False
+
+    def test_prometheus_exposition(self):
+        r = MetricsRegistry()
+        r.inc("cache.hits", 3, help="Result-cache lookup hits")
+        r.inc("tick_impl.resolved", impl="jnp")
+        r.observe("wall_s", 0.3)
+        text = r.to_prometheus()
+        assert "# HELP cache_hits Result-cache lookup hits" in text
+        assert "# TYPE cache_hits counter" in text
+        assert "cache_hits 3" in text
+        assert 'tick_impl_resolved{impl="jnp"} 1' in text
+        assert 'wall_s_bucket{le="+Inf"} 1' in text
+        assert "wall_s_count 1" in text
+
+    def test_dump_json_vs_prometheus(self, tmp_path):
+        r = MetricsRegistry()
+        r.inc("a", 2)
+        jpath, ppath = tmp_path / "m.json", tmp_path / "m.prom"
+        r.dump(str(jpath))
+        r.dump(str(ppath))
+        doc = json.loads(jpath.read_text())
+        assert doc["counters"] == {"a": 2.0}
+        assert "exported_unix" in doc
+        assert "# TYPE a counter" in ppath.read_text()
+
+    def test_global_registry_is_a_singleton(self):
+        assert get_registry() is get_registry()
+
+
+# -------------------------------------------------------------------- trace
+class TestTracer:
+    def test_disabled_span_records_nothing(self):
+        tr = Tracer()
+        with tr.span("phase"):
+            pass
+        assert tr.events == []
+
+    def test_enabled_span_records_complete_event(self):
+        tr = Tracer(run_id="abc", enabled=True)
+        with tr.span("simulate", lanes=4):
+            pass
+        (ev,) = tr.events
+        assert ev["name"] == "simulate" and ev["ph"] == "X"
+        assert ev["dur"] >= 1
+        assert ev["args"] == {"lanes": 4, "run_id": "abc"}
+
+    def test_span_annotates_and_propagates_exceptions(self):
+        tr = Tracer(enabled=True)
+        with pytest.raises(RuntimeError):
+            with tr.span("boom"):
+                raise RuntimeError("x")
+        (ev,) = tr.events
+        assert ev["args"]["error"] is True
+
+    def test_chrome_dict_and_dump(self, tmp_path):
+        tr = Tracer(run_id="rid1", enabled=True)
+        with tr.span("a"):
+            pass
+        tr.instant("marker", note="hi")
+        path = tmp_path / "trace.json"
+        tr.dump(str(path))
+        doc = json.loads(path.read_text())
+        assert doc["otherData"]["run_id"] == "rid1"
+        names = [e["name"] for e in doc["traceEvents"]]
+        assert names == ["a", "marker"]
+
+    def test_enable_sets_run_id_and_reset_clears(self):
+        tr = Tracer()
+        tr.enable(run_id="zz")
+        assert tr.enabled and tr.run_id == "zz"
+        with tr.span("a"):
+            pass
+        tr.reset()
+        assert tr.events == []
+
+    def test_global_tracer_disabled_by_default(self):
+        assert get_tracer() is get_tracer()
+
+    def test_jax_device_profile_noop_when_disabled(self):
+        # tracer disabled -> silent no-op even with a logdir
+        with jax_device_profile("/tmp/never-used"):
+            pass
+        with jax_device_profile(None):
+            pass

@@ -1,0 +1,111 @@
+"""Direct coverage for ``repro.sim.output`` (ISSUE 8 satellite).
+
+These collectors were previously exercised only through
+``core/hcdc.py``; the batched backend's series capture
+(``repro.sim.batched.series_from_capture``) now also emits
+``TimeSeries``, so the schema's edge cases get their own tests.
+"""
+
+import numpy as np
+import pytest
+
+from repro.sim.output import (
+    Histogram,
+    OutputCollector,
+    TimeSeries,
+    mean_and_error,
+)
+
+
+class TestTimeSeries:
+    def test_record_preserves_insertion_order(self):
+        ts = TimeSeries("disk_used")
+        for t, v in [(0, 1.0), (3600, 2.5), (7200, 2.0)]:
+            ts.record(t, v)
+        assert ts.times == [0, 3600, 7200]
+        assert ts.values == [1.0, 2.5, 2.0]
+
+    def test_to_arrays_round_trip(self):
+        ts = TimeSeries("x", times=[1, 2, 3], values=[9.0, 8.0, 7.0])
+        t, v = ts.to_arrays()
+        np.testing.assert_array_equal(t, [1, 2, 3])
+        np.testing.assert_array_equal(v, [9.0, 8.0, 7.0])
+
+    def test_summary_digest(self):
+        ts = TimeSeries("x", times=[0, 1, 2, 3],
+                        values=[4.0, 1.0, 3.0, 2.0])
+        s = ts.summary()
+        assert s == {"n": 4.0, "min": 1.0, "mean": 2.5, "max": 4.0,
+                     "last": 2.0}
+
+    def test_summary_last_is_positional_not_extremal(self):
+        # 'last' must be the final recorded value, whatever its rank.
+        ts = TimeSeries("x", times=[0, 1], values=[100.0, -5.0])
+        assert ts.summary()["last"] == -5.0
+
+    def test_empty_series_summary_is_zeros(self):
+        s = TimeSeries("empty").summary()
+        assert s == {"n": 0.0, "min": 0.0, "mean": 0.0, "max": 0.0,
+                     "last": 0.0}
+
+    def test_empty_series_to_arrays(self):
+        t, v = TimeSeries("empty").to_arrays()
+        assert t.size == 0 and v.size == 0
+
+
+class TestHistogram:
+    def test_counts_and_bins(self):
+        h = Histogram("wait")
+        for x in [0.0, 0.5, 1.0, 1.5, 2.0]:
+            h.record(x)
+        counts, edges = h.counts(bins=4)
+        assert counts.sum() == 5
+        assert len(edges) == 5
+        assert edges[0] == 0.0 and edges[-1] == 2.0
+
+    def test_mean(self):
+        h = Histogram("wait")
+        for x in [1.0, 2.0, 6.0]:
+            h.record(x)
+        assert h.mean == pytest.approx(3.0)
+
+    def test_empty_mean_is_zero(self):
+        assert Histogram("empty").mean == 0.0
+
+
+class TestOutputCollector:
+    def test_ts_and_hist_are_memoized_per_name(self):
+        out = OutputCollector()
+        assert out.ts("a") is out.ts("a")
+        assert out.hist("h") is out.hist("h")
+        out.ts("a").record(0, 1.0)
+        assert out.series["a"].values == [1.0]
+
+    def test_count_accumulates(self):
+        out = OutputCollector()
+        out.count("jobs")
+        out.count("jobs", 2.0)
+        assert out.counters["jobs"] == 3.0
+
+    def test_summary_folds_hists(self):
+        out = OutputCollector()
+        out.count("jobs", 5.0)
+        out.hist("wait").record(2.0)
+        out.hist("wait").record(4.0)
+        s = out.summary()
+        assert s["jobs"] == 5.0
+        assert s["wait.mean"] == pytest.approx(3.0)
+        assert s["wait.n"] == 2.0
+
+
+def test_mean_and_error_single_run_has_no_spread():
+    m, sd, se = mean_and_error([7.0])
+    assert (m, sd, se) == (7.0, 0.0, 0.0)
+
+
+def test_mean_and_error_percentages():
+    m, sd_pct, se_pct = mean_and_error([9.0, 11.0])
+    assert m == pytest.approx(10.0)
+    sd = np.std([9.0, 11.0], ddof=1)
+    assert sd_pct == pytest.approx(100.0 * sd / 10.0)
+    assert se_pct == pytest.approx(100.0 * sd / np.sqrt(2) / 10.0)

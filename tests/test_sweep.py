@@ -232,6 +232,45 @@ def test_curves_produce_series_digests(tmp_path):
     assert doc["series"][res.spec.label]["gcs_used"]["n"] == digest["n"]
 
 
+# -------------------------------------------------------- telemetry (obs)
+def test_pool_workers_merge_metric_snapshots():
+    """Spawned workers carry their own registry; the parent folds each
+    task's snapshot delta back in, so a parallel sweep's counters match
+    a serial run's."""
+    from repro.obs.metrics import get_registry
+
+    reg = get_registry()
+    specs = with_seeds([ScenarioSpec(base="III", cache_tb=10.0, **TINY)], 3)
+    reg.reset()
+    run_sweep(specs, workers=2)
+    parallel_runs = reg.value("scenario.runs")
+    par_hist = reg.snapshot()["histograms"]["scenario.wall_s"]
+    reg.reset()
+    run_sweep(specs, workers=1)
+    serial_runs = reg.value("scenario.runs")
+    reg.reset()
+    assert parallel_runs == serial_runs == float(len(specs))
+    assert par_hist["count"] == len(specs)
+
+
+def test_configs_per_sec_floor(tmp_path):
+    """Below the 1 ms wall-clock floor the throughput rate is noise:
+    the property reports ``None`` and the JSON export omits the field."""
+    import json
+
+    res = run_scenario(ScenarioSpec(base="III", cache_tb=10.0, **TINY))
+    fast = SweepResult(results=[res], wall_s=SweepResult.WALL_S_FLOOR / 2)
+    assert fast.configs_per_sec is None
+    slow = SweepResult(results=[res], wall_s=2.0)
+    assert slow.configs_per_sec == pytest.approx(0.5)
+    f1, f2 = tmp_path / "fast.json", tmp_path / "slow.json"
+    fast.to_json(str(f1))
+    slow.to_json(str(f2))
+    assert "configs_per_sec" not in json.loads(f1.read_text())
+    assert json.loads(f2.read_text())["configs_per_sec"] == \
+        pytest.approx(0.5)
+
+
 # ------------------------------------------------------------ spec physics
 def test_job_rate_scale_scales_submissions():
     base = run_scenario(ScenarioSpec(base="I", **TINY))

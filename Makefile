@@ -3,7 +3,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast bench bench-baseline bench-smoke sweep-demo \
-	decide-demo lint clean
+	decide-demo crash-soak lint clean
 
 test:
 	$(PY) -m pytest -x -q
@@ -54,6 +54,13 @@ decide-demo:
 	    --metrics-out results/decide_metrics.prom \
 	    --trace-out results/decide_trace.json \
 	    --cross-check --quiet --json results/decide_demo.json
+
+# Resilience soak (docs/resilience.md): SIGKILL a checkpointed sweep
+# mid-run and resume it, then run a sweep to completion under
+# deterministic crash/hang/transient/corrupt injection. Nightly CI runs
+# this; locally it takes ~1 minute.
+crash-soak:
+	$(PY) scripts/crash_soak.py
 
 lint:
 	ruff check src tests benchmarks scripts

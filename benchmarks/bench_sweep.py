@@ -45,6 +45,13 @@ the same warm pricing grid with the metrics registry enabled vs disabled,
 interleaved min-of-3. Its derived column is the enabled/disabled wall
 ratio; the acceptance bar is < 1.05 (< 5% of warm throughput).
 
+Part 8 is the resilience-overhead row (``sweep.resilience.overhead``,
+the fault-tolerant jobs layer of ``repro.sim.jobs``): the warm pricing
+grid executed through the job registry (retries enabled, no faults
+injected) vs the plain path, both at the same ``lane_chunk`` so only the
+registry bookkeeping differs. Its derived column is the jobs/plain wall
+ratio; the acceptance bar is < 1.05 (docs/resilience.md).
+
 Spawned pool workers are pinned to ``JAX_PLATFORMS=cpu`` by
 ``run_sweep``'s worker initializer, so the process rows cannot hang
 probing accelerator devices while this process holds them.
@@ -238,6 +245,36 @@ def _obs_overhead_rows(jspecs: List[ScenarioSpec]) -> List[Dict]:
              "derived": on / off if off > 0 else 0.0}]
 
 
+def _resilience_overhead_rows(jspecs: List[ScenarioSpec]) -> List[Dict]:
+    """``sweep.resilience.overhead``: warm batched sweeps through the
+    fault-tolerant jobs layer (registry + per-chunk journaling hooks,
+    retries enabled, zero faults injected) vs the plain path, interleaved
+    min-of-3 so OS noise cancels. Both sides use the same ``lane_chunk``
+    so the chunked program is identical and only the job-registry
+    bookkeeping differs. The derived column is jobs/plain wall — the
+    acceptance bar is < 1.05 (resilience costs < 5% of warm throughput
+    when nothing fails, docs/resilience.md). Display-only: tracked in
+    the nightly summary, not the bench-smoke regression gate."""
+    from repro.sim.jobs import RetryPolicy
+
+    chunk = 2
+    run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK,
+              lane_chunk=chunk)  # absorb the chunked-program compile
+    plain = jobs = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK,
+                  lane_chunk=chunk)
+        plain = min(plain, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_sweep(jspecs, backend="jax", tick=JAX_BENCH_TICK,
+                  lane_chunk=chunk, retry=RetryPolicy())
+        jobs = min(jobs, time.perf_counter() - t0)
+    return [{"name": f"sweep.resilience.overhead.{len(jspecs)}cfg",
+             "us_per_call": jobs / len(jspecs) * 1e6,
+             "derived": jobs / plain if plain > 0 else 0.0}]
+
+
 def _workload_rows(days: float, n_files: int) -> List[Dict]:
     specs = expand_grid({"base": "III", "days": days, "n_files": n_files,
                          "cache_tb": 20.0, "workload": list(WORKLOAD_PANEL)})
@@ -332,6 +369,7 @@ def run(n_configs: int = 8, days: float = 0.25, n_files: int = 4000,
          if warm.wall_s > 0 else 0.0},
     ]
     rows += _obs_overhead_rows(jspecs)
+    rows += _resilience_overhead_rows(jspecs)
     rows += _lane_scaling_rows(0.1, jfiles,
                                [16, 64] if fast else [16, 64, 256])
     rows += _workload_rows(jdays, jfiles)

@@ -1,0 +1,208 @@
+"""Crash-soak harness for the fault-tolerant sweep path (nightly CI).
+
+Exercises the two resilience guarantees end-to-end through the real CLI
+(``scripts/run_sweep.py``), not the library API, so process spawning,
+signal handling, and the exit-code contract are all on the hook:
+
+1. **Kill + resume** — launch a checkpointed sweep (``--resume`` with a
+   result cache), SIGKILL it mid-run, re-run the identical command, and
+   assert the rerun completes with every config present while serving
+   the journaled prefix from cache (``cache_hits`` > 0 whenever the
+   first run survived long enough to finish at least one job).
+2. **Fault soak** — run a sweep to completion under deterministic fault
+   injection (crashes, hangs, transient errors, corrupted cache reads
+   via ``--faults``) with retries enabled, and assert a full,
+   non-partial result (exit 0, no abandoned jobs).
+
+Usage (defaults sized for a ~1-2 minute nightly job)::
+
+    PYTHONPATH=src python scripts/crash_soak.py
+    PYTHONPATH=src python scripts/crash_soak.py --kill-after 5 --keep
+
+See docs/resilience.md for the fault-injection matrix and the resume
+semantics being soaked here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+log = logging.getLogger("crash_soak")
+
+SCRIPTS = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(SCRIPTS)
+
+
+def _sweep_cmd(args: argparse.Namespace, cache_dir: str, json_out: str,
+               extra: list) -> list:
+    cmd = [sys.executable, os.path.join(SCRIPTS, "run_sweep.py"),
+           "--base", "III", "--days", str(args.days),
+           "--files", str(args.files),
+           "--cache-tb", args.cache_tb, "--seeds", str(args.seeds),
+           "--backend", args.backend,
+           "--workers", str(args.workers),
+           "--cache-dir", cache_dir, "--resume",
+           "--json", json_out, "--quiet"]
+    if args.backend == "jax":
+        cmd += ["--tick", "60", "--lane-chunk", "2"]
+    return cmd + extra
+
+
+def _run(cmd: list, **kw) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("REPRO_FAULTS", None)  # phases control injection explicitly
+    return subprocess.run(cmd, env=env, cwd=ROOT, **kw)
+
+
+def phase_kill_resume(args: argparse.Namespace, tmp: str) -> bool:
+    """SIGKILL a checkpointed sweep mid-run, then resume it."""
+    cache = os.path.join(tmp, "cache-kill")
+    json_out = os.path.join(tmp, "resume.json")
+    cmd = _sweep_cmd(args, cache, json_out, [])
+    n_expected = len(args.cache_tb.split(",")) * args.seeds
+
+    log.info("[kill+resume] launching: %s", " ".join(cmd))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("REPRO_FAULTS", None)
+    # Own session + own log file, and the kill takes out the whole
+    # process group: worker processes die with the parent (the scenario
+    # being simulated is the machine going away, not a tidy shutdown),
+    # and no orphan can sit on an inherited stdout pipe blocking
+    # whatever is consuming this script's output.
+    with open(os.path.join(tmp, "victim.log"), "w") as victim_log:
+        proc = subprocess.Popen(cmd, env=env, cwd=ROOT,
+                                stdout=victim_log,
+                                stderr=subprocess.STDOUT,
+                                start_new_session=True)
+        time.sleep(args.kill_after)
+    if proc.poll() is None:
+        log.info("[kill+resume] SIGKILL (whole process group) after %.1fs",
+                 args.kill_after)
+        try:
+            os.killpg(proc.pid, signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+        proc.wait()
+        killed = True
+    else:
+        log.warning("[kill+resume] run finished in under %.1fs (rc=%d) — "
+                    "increase the grid or lower --kill-after for a real "
+                    "mid-run kill; resume check degrades to a warm re-run",
+                    args.kill_after, proc.returncode)
+        killed = proc.returncode != 0
+
+    log.info("[kill+resume] resuming with the identical command ...")
+    res = _run(cmd)
+    if res.returncode != 0:
+        log.error("[kill+resume] FAIL: resume exited %d", res.returncode)
+        return False
+    with open(json_out) as f:
+        doc = json.load(f)
+    n_rows = len(doc["rows"])
+    hits = doc.get("cache_hits", 0)
+    lanes = doc.get("lanes_simulated")
+    log.info("[kill+resume] resume: %d/%d configs, cache_hits=%d, "
+             "lanes_simulated=%s", n_rows, n_expected, hits, lanes)
+    if n_rows != n_expected:
+        log.error("[kill+resume] FAIL: %d of %d configs after resume",
+                  n_rows, n_expected)
+        return False
+    if doc.get("failures"):
+        log.error("[kill+resume] FAIL: abandoned jobs after resume: %s",
+                  doc["failures"])
+        return False
+    if killed and hits == 0:
+        # Not an error by itself (the kill may have landed before the
+        # first job finished journaling) but the soak lost its point.
+        log.warning("[kill+resume] kill landed before any job was "
+                    "journaled (cache_hits=0) — raise --kill-after so "
+                    "the resume actually skips work")
+    log.info("[kill+resume] OK")
+    return True
+
+
+def phase_fault_soak(args: argparse.Namespace, tmp: str) -> bool:
+    """Run to completion under crash/hang/transient/corrupt injection."""
+    cache = os.path.join(tmp, "cache-faults")
+    json_out = os.path.join(tmp, "faults.json")
+    plan = (f"seed={args.fault_seed},crash=0.15,hang=0.1,transient=0.2,"
+            f"corrupt=0.2,hang_s=0.5,attempts=1")
+    cmd = _sweep_cmd(args, cache, json_out,
+                     ["--faults", plan, "--retries", "4",
+                      "--job-timeout", "30"])
+    n_expected = len(args.cache_tb.split(",")) * args.seeds
+
+    log.info("[fault soak] plan: %s", plan)
+    res = _run(cmd)
+    if res.returncode != 0:
+        log.error("[fault soak] FAIL: exited %d (3 = partial result — a "
+                  "job exhausted its retries)", res.returncode)
+        return False
+    with open(json_out) as f:
+        doc = json.load(f)
+    n_rows = len(doc["rows"])
+    if n_rows != n_expected or doc.get("failures"):
+        log.error("[fault soak] FAIL: %d of %d configs, failures=%s",
+                  n_rows, n_expected, doc.get("failures"))
+        return False
+    log.info("[fault soak] OK: %d/%d configs under injection", n_rows,
+             n_expected)
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Kill/resume and fault-injection soak for run_sweep")
+    ap.add_argument("--days", type=float, default=2.0,
+                    help="horizon per config (~1s each on the process "
+                         "backend); sized so the kill+resume run lasts "
+                         "well past --kill-after")
+    ap.add_argument("--files", type=int, default=1000)
+    ap.add_argument("--cache-tb", default="5,10,20,40,80,160",
+                    help="cache-size axis (with --seeds sets grid size)")
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--backend", default="process",
+                    choices=["process", "jax"],
+                    help="process journals per config as each finishes "
+                         "(finest kill/resume granularity, the default); "
+                         "jax journals per lane chunk")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--kill-after", type=float, default=5.0,
+                    help="seconds before the whole-process-group SIGKILL "
+                         "in the kill+resume phase (late enough that "
+                         "some jobs have journaled, early enough that "
+                         "some have not)")
+    ap.add_argument("--fault-seed", type=int, default=7)
+    ap.add_argument("--keep", action="store_true",
+                    help="keep the scratch directory (prints its path)")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(levelname)s %(name)s: %(message)s")
+    tmp = tempfile.mkdtemp(prefix="crash_soak.")
+    log.info("scratch: %s", tmp)
+    try:
+        ok = phase_kill_resume(args, tmp)
+        ok = phase_fault_soak(args, tmp) and ok
+    finally:
+        if args.keep:
+            log.info("kept scratch dir: %s", tmp)
+        else:
+            shutil.rmtree(tmp, ignore_errors=True)
+    log.info("crash soak: %s", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

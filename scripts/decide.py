@@ -34,6 +34,7 @@ from repro.obs.logs import LOG_LEVELS, setup_logging
 from repro.obs.metrics import get_registry
 from repro.obs.trace import get_tracer
 from repro.sim.decide import OnPremDisk, decide
+from repro.sim.jobs import RetryPolicy
 from repro.sim.sweep import SweepDriver, run_sweep
 
 log = logging.getLogger("decide")
@@ -122,6 +123,23 @@ def main(argv=None) -> int:
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the result cache even if --cache-dir or "
                          "$REPRO_CACHE_DIR is set")
+    ap.add_argument("--retries", type=int, default=None, metavar="N",
+                    help="fault-tolerant sweeps: retry crashed/timed-out/"
+                         "transiently-failing jobs up to N attempts; if a "
+                         "job still fails the report is marked degraded "
+                         "and the claim is refused (docs/resilience.md)")
+    ap.add_argument("--job-timeout", type=float, default=None, metavar="S",
+                    help="per-job wall-clock deadline in seconds")
+    ap.add_argument("--faults", default=os.environ.get("REPRO_FAULTS"),
+                    metavar="PLAN",
+                    help="deterministic fault injection for resilience "
+                         "testing, e.g. 'seed=7,crash=0.2,transient=0.2' "
+                         "(default: $REPRO_FAULTS if set)")
+    ap.add_argument("--resume", action="store_true",
+                    help="journal each finished job into --cache-dir as it "
+                         "completes so a killed invocation re-run with the "
+                         "same flags recomputes only unfinished jobs "
+                         "(requires --cache-dir; implies --retries 3)")
     ap.add_argument("--backend", default="jax",
                     choices=["jax", "process"])
     ap.add_argument("--tick", type=float, default=60.0,
@@ -176,9 +194,29 @@ def main(argv=None) -> int:
         log.error("--tick-impl requires --backend jax")
         return 2
     cache_dir = None if args.no_cache else args.cache_dir
-    driver = SweepDriver(backend=args.backend, tick=args.tick,
-                         workers=args.workers, tick_impl=args.tick_impl,
-                         lane_chunk=args.lane_chunk, cache=cache_dir)
+    if args.resume and not cache_dir:
+        log.error("--resume needs a result cache (--cache-dir or "
+                  "$REPRO_CACHE_DIR) to journal completed jobs into")
+        return 2
+    if args.retries is not None and args.retries < 1:
+        log.error("--retries must be >= 1")
+        return 2
+    retry = None
+    if args.retries is not None:
+        retry = RetryPolicy(max_attempts=args.retries)
+    elif args.resume:
+        retry = RetryPolicy()  # engage the jobs layer so completions journal
+    try:
+        driver = SweepDriver(backend=args.backend, tick=args.tick,
+                             workers=args.workers, tick_impl=args.tick_impl,
+                             lane_chunk=args.lane_chunk, cache=cache_dir,
+                             retry=retry, faults=args.faults,
+                             job_timeout=args.job_timeout)
+    except ValueError as e:  # malformed --faults plan
+        log.error("%s", e)
+        return 2
+    if args.faults and not args.quiet:
+        log.info("fault injection: %s", args.faults)
     if cache_dir and not args.quiet:
         log.info("result cache at %s", cache_dir)
     if not args.quiet:
@@ -238,6 +276,14 @@ def main(argv=None) -> int:
         get_tracer().dump(args.trace_out)
         log.info("wrote %s (%d spans)", args.trace_out,
                  len(get_tracer().events))
+
+    if report.degraded:
+        n = len(report.stats.get("failures", []))
+        log.error("decision report is DEGRADED: %d job(s) abandoned after "
+                  "retries — the claim verdict is refused; re-run%s to "
+                  "complete the grid (docs/resilience.md)", n,
+                  " with --resume" if cache_dir else "")
+        return 3
 
     if args.cross_check:
         other = "process" if args.backend == "jax" else "jax"

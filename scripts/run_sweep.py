@@ -23,6 +23,12 @@ or from a YAML/JSON spec file (see docs/simulation.md)::
 Spec-file shape: top-level fixed fields plus either ``axes`` (mapping of
 spec field -> value or list, Cartesian product) or ``scenarios`` (explicit
 list of spec mappings).
+
+Long sweeps can run fault-tolerantly (``--retries``/``--job-timeout``),
+checkpoint finished jobs into the result cache (``--resume``), and be
+stress-tested under deterministic fault injection (``--faults`` /
+``$REPRO_FAULTS``) — see docs/resilience.md. Exit status 3 means the
+sweep finished but returned a partial result (some jobs abandoned).
 """
 
 from __future__ import annotations
@@ -40,6 +46,7 @@ from repro.kernels.registry import TICK_IMPL_CHOICES
 from repro.obs.logs import LOG_LEVELS, setup_logging
 from repro.obs.metrics import get_registry
 from repro.obs.trace import get_tracer, jax_device_profile
+from repro.sim.jobs import RetryPolicy
 from repro.sim.output import write_csv
 from repro.sim.sweep import run_sweep
 
@@ -167,6 +174,27 @@ def main(argv=None) -> int:
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the result cache even if --cache-dir or "
                          "$REPRO_CACHE_DIR is set")
+    ap.add_argument("--retries", type=int, default=None, metavar="N",
+                    help="fault-tolerant execution: retry crashed/timed-"
+                         "out/transiently-failing jobs up to N attempts "
+                         "with exponential backoff, and return a partial "
+                         "result (exit 3) instead of raising when a job "
+                         "exhausts them (docs/resilience.md)")
+    ap.add_argument("--job-timeout", type=float, default=None, metavar="S",
+                    help="per-job wall-clock deadline in seconds; overdue "
+                         "jobs are killed and retried (counts as a "
+                         "retryable failure)")
+    ap.add_argument("--faults", default=os.environ.get("REPRO_FAULTS"),
+                    metavar="PLAN",
+                    help="inject deterministic faults for resilience "
+                         "testing, e.g. 'seed=7,crash=0.2,hang=0.1,"
+                         "transient=0.2,corrupt=0.1' (default: "
+                         "$REPRO_FAULTS if set). See docs/resilience.md")
+    ap.add_argument("--resume", action="store_true",
+                    help="journal each finished job into --cache-dir as it "
+                         "completes, so a killed run re-run with the same "
+                         "flags recomputes only unfinished jobs (requires "
+                         "--cache-dir; implies --retries 3)")
     ap.add_argument("--out", default="", help="write the full table as CSV")
     ap.add_argument("--json", dest="json_out", default="",
                     help="write table + series digests as JSON")
@@ -247,8 +275,22 @@ def main(argv=None) -> int:
                      f"{result.cost_usd:12,.2f}")
 
     cache_dir = None if args.no_cache else args.cache_dir
+    if args.resume and not cache_dir:
+        log.error("--resume needs a result cache (--cache-dir or "
+                  "$REPRO_CACHE_DIR) to journal completed jobs into")
+        return 2
+    if args.retries is not None and args.retries < 1:
+        log.error("--retries must be >= 1")
+        return 2
+    retry = None
+    if args.retries is not None:
+        retry = RetryPolicy(max_attempts=args.retries)
+    elif args.resume:
+        retry = RetryPolicy()  # engage the jobs layer so completions journal
     if cache_dir:
         log.info("cache: %s", cache_dir)
+    if args.faults:
+        log.info("fault injection: %s", args.faults)
     try:
         with jax_device_profile(args.jax_profile or None):
             result = run_sweep(specs, workers=args.workers,
@@ -256,7 +298,9 @@ def main(argv=None) -> int:
                                backend=args.backend, tick=args.tick,
                                tick_impl=args.tick_impl,
                                lane_chunk=args.lane_chunk, cache=cache_dir,
-                               record_series=args.record_series)
+                               record_series=args.record_series,
+                               retry=retry, faults=args.faults,
+                               job_timeout=args.job_timeout)
     except ValueError as e:  # e.g. non-uniform grid on the jax backend
         log.error("%s", e)
         return 2
@@ -267,6 +311,15 @@ def main(argv=None) -> int:
         log.info("cache: %d of %d configs served from cache, "
                  "%d dynamics lane(s) simulated",
                  result.cache_hits, len(result), result.lanes_simulated)
+    if result.failures:
+        for f in result.failures:
+            log.error("job %s abandoned after %d attempt(s): [%s] %s",
+                      f.job_id, f.attempts, f.kind,
+                      f.errors[-1] if f.errors else "")
+        log.error("PARTIAL result: %d config(s) returned, %d job(s) "
+                  "abandoned%s", len(result), len(result.failures),
+                  " — re-run with --resume to retry only the missing jobs"
+                  if cache_dir else "")
 
     front = result.pareto_front()
     print(f"\nPareto front (min cost, max jobs) — {len(front)} of "
@@ -295,7 +348,7 @@ def main(argv=None) -> int:
         get_tracer().dump(args.trace_out)
         log.info("wrote %s (%d spans)", args.trace_out,
                  len(get_tracer().events))
-    return 0
+    return 3 if result.failures else 0
 
 
 if __name__ == "__main__":

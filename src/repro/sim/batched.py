@@ -794,13 +794,17 @@ def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
 
 
 def _lane_result(grid: "PackedGrid", out: dict, si: int,
-                 wall_s: float) -> ScenarioResult:
+                 wall_s: float, lane_base: int = 0) -> ScenarioResult:
     """Fold one spec's dynamics-lane aggregates into a ``ScenarioResult``
     with the same metric keys the event-driven ``HCDCScenario.metrics``
     emits. Several specs may share one simulated lane (pricing-only
-    variants); each is billed with its own cost model."""
+    variants); each is billed with its own cost model.
+
+    ``lane_base`` shifts the lane index when ``out`` holds only a chunk
+    of the grid's lanes (the resilient lane-chunk job path journals
+    results per chunk, before the full arrays exist)."""
     spec = grid.specs[si]
-    li = int(grid.lane_of[si])
+    li = int(grid.lane_of[si]) - lane_base
     names = grid.site_names
     jobs_done_site = out["jobs_done_site"][li]
     m = {
@@ -888,12 +892,111 @@ def series_from_capture(grid: "PackedGrid", out: Dict[str, np.ndarray],
     return series
 
 
+#: Default lane-chunk size for the resilient job path when the caller
+#: did not pick one: small enough that an abandoned job loses little
+#: work, large enough that per-chunk dispatch overhead stays trivial.
+_RESILIENT_LANE_CHUNK = 8
+
+
+def _simulate_packed_jobs(grid: "PackedGrid", *, tick_impl: str,
+                          lane_chunk: Optional[int], record_series,
+                          faults, retry, job_timeout,
+                          journal: Optional[Callable]):
+    """Run a packed grid as retryable lane-chunk jobs.
+
+    Each job executes one fixed-size slice of the grid's dynamics lanes
+    through the same compiled program the plain chunked path uses, so a
+    converged fault-injected run is bitwise identical to a fault-free
+    one (lanes never interact; see ``simulate_packed``). Completed
+    chunks are journaled through ``journal`` as they land (checkpointed
+    resume); abandoned chunks leave their lanes out of the stitched
+    output and are reported via the returned registry.
+
+    Returns ``(out, registry, missing_lanes)`` where ``out`` has the
+    ``simulate_packed`` shape (zero-filled for missing lanes — callers
+    must skip those via ``missing_lanes``).
+    """
+    from repro.sim import jobs as joblib
+
+    impl = resolve_tick_impl(tick_impl)
+    record = _normalize_record(record_series, grid.n_ticks)
+    if lane_chunk is not None and lane_chunk <= 0:
+        raise ValueError(f"lane_chunk must be > 0, got {lane_chunk!r}")
+    L = grid.n_lanes
+    C = int(lane_chunk) if lane_chunk is not None else min(
+        L, _RESILIENT_LANE_CHUNK)
+    program = _grid_program(len(grid.site_names), grid.max_jobs_per_tick,
+                            grid.n_months, impl.name, record)
+    T = grid.n_ticks
+    shared = (np.asarray(grid.times), np.asarray(grid.dts),
+              np.asarray(grid.month_idx), np.arange(T, dtype=np.int32),
+              np.float32(grid.horizon))
+    lanes = [np.asarray(getattr(grid, name)) for name in _LANE_FIELDS]
+
+    spec_of_chunk: Dict[tuple, list] = {}
+    jobs_list = []
+    for start in range(0, L, C):
+        stop = min(start + C, L)
+        sis = [si for si in range(grid.n_specs)
+               if start <= int(grid.lane_of[si]) < stop]
+        labels = tuple(grid.specs[si].label for si in sis)
+        jobs_list.append(joblib.Job(job_id=f"lanes{start:05d}",
+                                    payload=(start, stop), labels=labels,
+                                    timeout_s=job_timeout))
+        spec_of_chunk[(start, stop)] = sis
+
+    tracer = get_tracer()
+
+    def run_one(job):
+        start, stop = job.payload
+        chunk = [a[start:stop] for a in lanes]
+        if stop - start < C:  # pad by replicating the last real lane
+            pad = C - (stop - start)
+            chunk = [np.concatenate([a] + [a[-1:]] * pad, axis=0)
+                     for a in chunk]
+        with tracer.span("simulate_packed.chunk", chunk=job.job_id,
+                         lanes=stop - start, tick_impl=impl.name):
+            o = program(*shared, *chunk)
+        return {k: np.asarray(v)[:stop - start] for k, v in o.items()}
+
+    on_done = None
+    if journal is not None:
+        def on_done(job, out_chunk):
+            start, stop = job.payload
+            journal([(grid.specs[si],
+                      _lane_result(grid, out_chunk, si, 0.0,
+                                   lane_base=start))
+                     for si in spec_of_chunk[(start, stop)]])
+
+    policy = retry if retry is not None else joblib.RetryPolicy()
+    chunk_results, registry = joblib.run_local_jobs(
+        jobs_list, run_one, policy=policy, faults=faults, on_done=on_done)
+
+    out: Dict[str, np.ndarray] = {}
+    done_lanes: set = set()
+    for job in registry.jobs.values():
+        if job.state != joblib.DONE:
+            continue
+        start, stop = job.payload
+        o = chunk_results[job.job_id]
+        if not out:
+            out = {k: np.zeros((L,) + v.shape[1:], dtype=v.dtype)
+                   for k, v in o.items()}
+        for k, v in o.items():
+            out[k][start:stop] = v
+        done_lanes.update(range(start, stop))
+    return out, registry, set(range(L)) - done_lanes
+
+
 def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
                   progress: Optional[Callable] = None,
                   tick_impl: str = "auto",
                   lane_chunk: Optional[int] = None,
                   devices: Optional[Sequence] = None,
-                  record_series=None) -> SweepResult:
+                  record_series=None,
+                  retry=None, faults=None,
+                  job_timeout: Optional[float] = None,
+                  journal: Optional[Callable] = None) -> SweepResult:
     """Execute a spec grid as one batched on-device program.
 
     Returns a ``SweepResult`` interchangeable with the process backend's
@@ -912,32 +1015,56 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
     ``record_series`` turns on per-tick series capture (``True`` or a
     sample stride in ticks); each result then carries the same summary
     digests in ``.series`` that the process backend reports.
+
+    ``retry``/``faults``/``job_timeout``/``journal`` engage the
+    fault-tolerant lane-chunk job path (``_simulate_packed_jobs``):
+    lanes execute as retryable chunk jobs, completions checkpoint
+    through ``journal``, and chunks that exhaust their retries drop
+    their specs from the (partial) result, reported in
+    ``SweepResult.failures``. The plain path is untouched when neither
+    ``retry`` nor ``faults`` is given. Multi-device round-robin is not
+    combined with the job path.
     """
     from repro.core.scenarios import pack_specs
 
+    resilient = retry is not None or faults is not None
+    if resilient and devices is not None:
+        raise ValueError("devices round-robin is not supported on the "
+                         "resilient job path (retry/faults)")
     tracer = get_tracer()
     t0 = time.perf_counter()
     with tracer.span("pack_specs", n_specs=len(specs)):
         grid = pack_specs(specs, tick=tick)
-    out = simulate_packed(grid, tick_impl=tick_impl,
-                          lane_chunk=lane_chunk, devices=devices,
-                          record_series=record_series)
+    registry = None
+    missing: set = set()
+    if resilient:
+        out, registry, missing = _simulate_packed_jobs(
+            grid, tick_impl=tick_impl, lane_chunk=lane_chunk,
+            record_series=record_series, faults=faults, retry=retry,
+            job_timeout=job_timeout, journal=journal)
+    else:
+        out = simulate_packed(grid, tick_impl=tick_impl,
+                              lane_chunk=lane_chunk, devices=devices,
+                              record_series=record_series)
     wall = time.perf_counter() - t0
     reg = get_registry()
     reg.inc("sweep.jax.runs", help="Batched JAX sweep invocations")
-    reg.inc("sweep.jax.lanes", grid.n_lanes,
+    reg.inc("sweep.jax.lanes", grid.n_lanes - len(missing),
             help="Dynamics lanes simulated on device")
     reg.observe("sweep.jax.wall_s", wall,
                 help="Batched JAX sweep wall time (s)")
     capture = _normalize_record(record_series, grid.n_ticks) is not None
+    ok_sis = [si for si in range(grid.n_specs)
+              if int(grid.lane_of[si]) not in missing]
     results: List[ScenarioResult] = []
-    for si in range(grid.n_specs):
-        r = _lane_result(grid, out, si, wall / grid.n_specs)
+    for si in ok_sis:
+        r = _lane_result(grid, out, si, wall / max(len(ok_sis), 1))
         if capture:
             r.series = {name: ts.summary() for name, ts in
                         series_from_capture(grid, out, si,
                                             record_series).items()}
         results.append(r)
         if progress is not None:
-            progress(si + 1, grid.n_specs, results[-1])
-    return SweepResult(results=results, wall_s=wall)
+            progress(len(results), len(ok_sis), results[-1])
+    return SweepResult(results=results, wall_s=wall,
+                       failures=registry.failures() if registry else [])

@@ -36,6 +36,13 @@ lane* once, on disk, keyed by content:
 module (get-or-compute), so refinement rounds, ``decide()`` solvers,
 cross-backend checks, and benchmarks all share one store. See
 ``docs/simulation.md`` ("Result cache & provenance").
+
+The store doubles as the *checkpoint journal* for fault-tolerant sweeps
+(``repro.sim.jobs``): completed jobs are written through as they finish,
+so a killed run leaves a valid prefix and ``--resume`` recomputes only
+what is missing, while the corruption-is-a-miss repair path above is
+what makes injected corrupted reads (``repro.sim.faults``) recoverable.
+See ``docs/resilience.md``.
 """
 
 from __future__ import annotations

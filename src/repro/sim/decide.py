@@ -673,11 +673,23 @@ class DecisionReport:
     onprem: OnPremDisk
     z: float
     stats: Dict[str, Any] = field(default_factory=dict)
+    #: True when the evaluator lost sweep work to exhausted retries
+    #: (``SweepDriver.failures`` non-empty): the candidate grid was not
+    #: fully explored, so the report refuses to assert the paper's
+    #: claim — ``claim_holds()`` downgrades to ``False`` and the
+    #: markdown/JSON exports flag the verdict as undetermined.
+    degraded: bool = False
 
     def claim_holds(self) -> bool:
         """The paper's qualitative claim: some frontier configuration
         provisions less on-prem disk than the disk-only baseline while its
-        jobs-done matches the baseline's within CI bounds."""
+        jobs-done matches the baseline's within CI bounds.
+
+        A degraded report never asserts the claim: with frontier-relevant
+        lanes missing, a "holds" verdict could rest on the surviving
+        subset of the grid."""
+        if self.degraded:
+            return False
         base_tb = self.onprem.provisioned_tb(self.baseline)
         for p in self.frontier:
             if (self.onprem.provisioned_tb(p) < base_tb
@@ -703,6 +715,7 @@ class DecisionReport:
         return {
             "z": self.z,
             "claim_holds": self.claim_holds(),
+            "degraded": self.degraded,
             "baseline": self._point_row(self.baseline),
             "chosen": self._point_row(self.chosen) if self.chosen else None,
             "frontier": [self._point_row(p) for p in self.frontier],
@@ -803,9 +816,24 @@ class DecisionReport:
                 ]
             else:
                 lines += [f"{b.note}."]
+        if self.degraded:
+            n_failed = len(self.stats.get("failures", []))
+            lines += [
+                "",
+                "## ⚠ Degraded run",
+                "",
+                f"{n_failed} sweep job(s) exhausted their retry budget "
+                "(see `stats.failures`): the candidate grid was not fully "
+                "explored, so this report refuses to assert the paper's "
+                "claim. Re-run with `--resume` against the same result "
+                "cache to recompute only the missing work "
+                "(docs/resilience.md).",
+            ]
+        verdict = ("is UNDETERMINED (degraded run)" if self.degraded
+                   else "HOLDS" if self.claim_holds() else "does NOT hold")
         lines += [
             "",
-            f"**Paper's claim {'HOLDS' if self.claim_holds() else 'does NOT hold'}** "
+            f"**Paper's claim {verdict}** "
             "at this scale: a frontier cloud-cache configuration "
             "provisions less on-prem disk than the disk-only baseline at "
             "matching jobs-done (within CI bounds).",
@@ -859,6 +887,13 @@ def decide(axes: Mapping[str, Any], evaluate: Evaluate, *,
             if v is not None and not isinstance(v, (list, tuple)):
                 baseline = replace(baseline, **{f: v})
     base_res = evaluate(with_seeds([baseline], n_seeds, first_seed))
+    if not base_res.results:
+        lost = getattr(base_res, "failures", [])
+        raise RuntimeError(
+            "decide(): the baseline evaluation returned no results"
+            + (f" ({len(lost)} job(s) abandoned after retries; "
+               "see docs/resilience.md)" if lost else "")
+            + " — without a baseline no claim can be made")
     base_point = summarize(base_res.results, z)[0]
 
     # Frontier dominance on *total* cost: pricing-deduped lanes tie on the
@@ -922,6 +957,14 @@ def decide(axes: Mapping[str, Any], evaluate: Evaluate, *,
     cache_stats = getattr(cache, "stats", None)
     if cache_stats is not None and hasattr(cache_stats, "as_dict"):
         report.stats["cache"] = cache_stats.as_dict()
+    # Resilient evaluators (``SweepDriver(retry=...)``) accumulate the
+    # jobs that exhausted their retry budget; any loss degrades the
+    # report — the grid the claim would rest on was not fully explored.
+    lost = getattr(evaluate, "failures", None)
+    if lost:
+        report.degraded = True
+        report.stats["failures"] = [
+            f.as_dict() if hasattr(f, "as_dict") else f for f in lost]
     # Embed the process-global metrics snapshot: the report is the
     # decision workflow's one artifact, so its operational story (cache
     # warmth, lanes simulated, kernel resolution) travels with it.

@@ -9,12 +9,41 @@ Fig. 7 waiting-time distributions.
 from __future__ import annotations
 
 import csv
+import io
 import json
 import os
+import uuid
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+def atomic_write_text(path: str, text: str) -> None:
+    """Write a text file via tmp-file + ``os.replace`` atomic commit.
+
+    Same durability contract as the result cache's ``LocalDirBackend``
+    (``repro.sim.cache``): a reader sees either the previous complete
+    file or the new complete file, never a truncated prefix, and an
+    interrupted writer leaves the original untouched (plus at most a
+    ``.tmp.`` orphan). Export paths use this so a crashed or killed run
+    never publishes a torn results file.
+    """
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
+    try:
+        with open(tmp, "w", newline="") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
 
 
 @dataclass
@@ -105,19 +134,22 @@ class OutputCollector:
 
 def write_csv(path: str, rows: Sequence[Dict[str, object]],
               fieldnames: Optional[Sequence[str]] = None) -> None:
-    """Write dict rows as CSV; columns default to first-seen key order."""
+    """Write dict rows as CSV; columns default to first-seen key order.
+
+    Committed atomically (``atomic_write_text``): an interrupted run
+    never leaves a truncated CSV at ``path``.
+    """
     if fieldnames is None:
         seen: Dict[str, None] = {}
         for r in rows:
             for k in r:
                 seen.setdefault(k)
         fieldnames = list(seen)
-    if os.path.dirname(path):
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=list(fieldnames), restval="")
-        w.writeheader()
-        w.writerows(rows)
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=list(fieldnames), restval="")
+    w.writeheader()
+    w.writerows(rows)
+    atomic_write_text(path, buf.getvalue())
 
 
 def mean_and_error(per_run_values: List[float]) -> Tuple[float, float, float]:

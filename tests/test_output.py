@@ -109,3 +109,51 @@ def test_mean_and_error_percentages():
     sd = np.std([9.0, 11.0], ddof=1)
     assert sd_pct == pytest.approx(100.0 * sd / 10.0)
     assert se_pct == pytest.approx(100.0 * sd / np.sqrt(2) / 10.0)
+
+
+# ------------------------------------------------ atomic exports (ISSUE 9)
+class TestAtomicWriteText:
+    def test_writes_and_replaces(self, tmp_path):
+        from repro.sim.output import atomic_write_text
+
+        path = tmp_path / "sub" / "table.csv"  # parent dir auto-created
+        atomic_write_text(str(path), "v1")
+        assert path.read_text() == "v1"
+        atomic_write_text(str(path), "v2")
+        assert path.read_text() == "v2"
+        assert list(tmp_path.rglob("*.tmp.*")) == []
+
+    def test_failed_commit_leaves_original_and_no_orphans(self, tmp_path,
+                                                          monkeypatch):
+        """A crash between tmp-write and commit must never publish a torn
+        file: the original survives byte-for-byte and the tmp file is
+        cleaned up."""
+        from repro.sim import output as out_mod
+
+        path = tmp_path / "table.csv"
+        out_mod.atomic_write_text(str(path), "original")
+
+        def exploding_replace(src, dst):
+            raise OSError("disk gone")
+
+        monkeypatch.setattr(out_mod.os, "replace", exploding_replace)
+        with pytest.raises(OSError, match="disk gone"):
+            out_mod.atomic_write_text(str(path), "replacement")
+        assert path.read_text() == "original"
+        assert [p.name for p in tmp_path.iterdir()] == ["table.csv"]
+
+    def test_write_csv_commits_atomically(self, tmp_path, monkeypatch):
+        """``write_csv`` (and through it every sweep export) rides the
+        same tmp+replace commit."""
+        from repro.sim import output as out_mod
+
+        path = tmp_path / "rows.csv"
+        out_mod.write_csv(str(path), [{"a": 1, "b": 2}])
+        first = path.read_text()
+        assert first.splitlines()[0] == "a,b"
+
+        monkeypatch.setattr(out_mod.os, "replace",
+                            lambda s, d: (_ for _ in ()).throw(OSError("no")))
+        with pytest.raises(OSError):
+            out_mod.write_csv(str(path), [{"a": 9, "b": 9}])
+        assert path.read_text() == first

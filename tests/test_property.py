@@ -320,3 +320,63 @@ def test_cache_key_sensitive_to_every_dynamics_field(data):
     mutated = replace(spec, **{field: data.draw(st.sampled_from(alternatives))})
     assert cache_key(mutated) != cache_key(spec), field
     assert cache_key(mutated, "jax", 60.0) != cache_key(spec, "jax", 60.0)
+
+
+# ---------------------------------------------------- retry backoff (ISSUE 9)
+_backoff_policies = st.builds(
+    lambda base, mult, cap, jit, seed: __import__(
+        "repro.sim.jobs", fromlist=["RetryPolicy"]).RetryPolicy(
+            max_attempts=10, base_delay_s=base, multiplier=mult,
+            max_delay_s=cap, jitter=jit, seed=seed),
+    st.floats(0.0, 10.0, allow_nan=False),
+    st.floats(1.0, 8.0, allow_nan=False),
+    st.floats(0.0, 100.0, allow_nan=False),
+    st.floats(0.0, 2.0, allow_nan=False),
+    st.integers(0, 2**31 - 1),
+)
+
+
+@given(_backoff_policies, st.text(min_size=0, max_size=24))
+@settings(max_examples=80, deadline=None)
+def test_retry_backoff_bounded_monotone_reproducible(policy, job_id):
+    """The resilience layer's backoff guarantees, over the whole policy
+    space: every delay lands in [0, max_delay_s], each job's delay
+    sequence is monotone non-decreasing in the attempt number (the
+    jitter term is per job, not per attempt), and the sequence is
+    bitwise-reproducible from the policy parameters alone."""
+    delays = [policy.delay_s(job_id, a) for a in range(1, 13)]
+    assert all(0.0 <= d <= policy.max_delay_s for d in delays)
+    assert all(b >= a for a, b in zip(delays, delays[1:]))
+    from repro.sim.jobs import RetryPolicy
+
+    clone = RetryPolicy(max_attempts=10, base_delay_s=policy.base_delay_s,
+                        multiplier=policy.multiplier,
+                        max_delay_s=policy.max_delay_s,
+                        jitter=policy.jitter, seed=policy.seed)
+    assert [clone.delay_s(job_id, a) for a in range(1, 13)] == delays
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.33), st.floats(0.0, 0.33),
+       st.floats(0.0, 0.33), st.integers(1, 3),
+       st.lists(st.text(min_size=1, max_size=12), min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_fault_plan_draws_deterministic_and_exclusive(seed, crash, hang,
+                                                      transient, attempts,
+                                                      job_ids):
+    """Fault directives are a pure function of (seed, job, attempt), at
+    most one kind fires per attempt, and nothing injects past the
+    ``attempts`` gate — the convergence-under-retry property the
+    end-to-end bitwise tests rest on."""
+    from repro.sim.faults import FaultPlan
+
+    plan = FaultPlan(seed=seed, crash=crash, hang=hang,
+                     transient=transient, attempts=attempts)
+    for job_id in job_ids:
+        for attempt in range(1, attempts + 2):
+            d1 = plan.directive(job_id, (), attempt)
+            d2 = plan.directive(job_id, (), attempt)
+            assert d1 == d2
+            if attempt > attempts:
+                assert d1 is None
+            if d1 is not None:
+                assert d1["kind"] in ("crash", "hang", "transient")

@@ -286,3 +286,30 @@ def test_peering_reduces_network_cost():
     # identical seed/config -> identical traffic, cheaper flat price
     assert peered.metrics["jobs_done"] == internet.metrics["jobs_done"]
     assert peered.network_usd < internet.network_usd
+
+
+def test_sweep_result_ok_and_failures_serialization(tmp_path):
+    """Partial results (ISSUE 9): ``ok`` flips on any abandoned job and
+    the structured failure report rides every JSON export."""
+    import json
+
+    from repro.sim.jobs import JobFailure
+
+    spec = ScenarioSpec(base="III", cache_tb=10.0, **TINY)
+    res = run_scenario(spec)
+    complete = SweepResult(results=[res], wall_s=1.0)
+    assert complete.ok and complete.failures == []
+
+    partial = SweepResult(
+        results=[res], wall_s=1.0,
+        failures=[JobFailure(job_id="spec0001", labels=(spec.label,),
+                             kind="timeout", attempts=3,
+                             errors=["attempt 3 [timeout]: deadline"])])
+    assert not partial.ok
+    out = tmp_path / "partial.json"
+    partial.to_json(str(out))
+    doc = json.loads(out.read_text())
+    assert doc["failures"] == [partial.failures[0].as_dict()]
+    clean = tmp_path / "complete.json"
+    complete.to_json(str(clean))
+    assert "failures" not in json.loads(clean.read_text())

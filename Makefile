@@ -2,8 +2,8 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench bench-baseline bench-smoke sweep-demo \
-	decide-demo crash-soak lint clean
+.PHONY: test test-fast bench bench-baseline bench-smoke bench-fleet \
+	sweep-demo decide-demo crash-soak lint clean
 
 test:
 	$(PY) -m pytest -x -q
@@ -22,6 +22,12 @@ bench:
 # Regenerate the committed perf baseline at the CI smoke scale.
 bench-baseline:
 	FAST=1 BENCH_JSON=BENCH_4.json $(PY) benchmarks/run.py
+
+# Full worker-fleet lane-scaling panel (1024/10k lanes x workers axis,
+# docs/distributed.md) + the bitwise parity gate; regenerates the
+# committed BENCH_fleet.json. Takes several minutes.
+bench-fleet:
+	$(PY) benchmarks/bench_fleet.py --json BENCH_fleet.json
 
 # Exit code 4 = baseline missing (skip with a note); 3 = scale mismatch
 # and 1 = regression both still fail (scripts/check_bench_regression.py).
@@ -64,6 +70,7 @@ crash-soak:
 
 lint:
 	ruff check src tests benchmarks scripts
+	python scripts/check_docs.py
 
 # Remove interpreter droppings (bytecode caches shipped by accident break
 # nothing but pollute diffs and wheels).

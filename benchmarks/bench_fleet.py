@@ -1,0 +1,150 @@
+"""Benchmark: distributed worker-fleet sweep throughput (ISSUE 10).
+
+Extends the ``sweep.jax.lane_scaling.*`` panel to 1024- and 10k-lane
+grids with a *workers* axis: each grid is executed through the
+persistent worker fleet (``repro.sim.runners``, subprocess transport,
+lane-chunk jobs) at 1 and 4 workers. Row names::
+
+    sweep.jax.lane_scaling.1024lane.w1     derived = lanes/sec
+    sweep.jax.lane_scaling.1024lane.w4
+    sweep.jax.lane_scaling.10klane.w1
+    sweep.jax.lane_scaling.10klane.w4
+    sweep.jax.fleet_speedup.<N>lane        derived = w4 / w1 lanes-per-sec
+    sweep.jax.fleet_parity.10klane         derived = 1.0 (bitwise gate)
+
+The parity row re-runs the largest grid through the serial in-process
+registry path (``run_local_jobs`` over the identical lane-chunk jobs)
+and raises unless the fleet result is byte-identical per config — the
+ISSUE 10 acceptance gate.
+
+Scaling expectations: the fleet's speedup is bounded by the host's
+physical cores. The numbers in the committed ``BENCH_fleet.json`` were
+measured on this repo's 1-core dev container, where ``w4`` can only
+match ``w1`` (documented there and in ``docs/distributed.md``); the
+>= 3x acceptance bar is realized on the nightly CI runner (4 vCPUs),
+whose table the workflow summary prints (``--baseline -`` mode).
+
+Sized so the full panel stays under ~10 minutes on one core:
+``days=0.05`` / ``n_files=250`` at the 60 s bench tick is ~80 lanes/sec
+serially, so the 10k-lane grid is ~2 min per execution. FAST=1 drops to
+a 64-lane / 2-worker smoke row (CI bench-smoke: plumbing, not
+throughput).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+from repro.core.scenarios import ScenarioSpec, with_seeds
+from repro.sim.sweep import run_sweep
+
+#: Same coarse clock as bench_sweep (validated against the 10 s tick by
+#: ``test_batched.test_jax_backend_tick_coarsening_stays_close``).
+JAX_BENCH_TICK = 60.0
+
+#: Fleet lane-chunk size: big enough to amortize one frame round trip
+#: per job, small enough that a 1024-lane grid still fans out 16 jobs.
+FLEET_CHUNK = 64
+
+#: Reduced per-lane scale for the big panels (one lane simulates in
+#: ~12 ms, so 10k lanes ~= 2 min per serial execution).
+DAYS, N_FILES = 0.05, 250
+
+
+def _lane_specs(n: int) -> List[ScenarioSpec]:
+    return with_seeds([ScenarioSpec(base="III", days=DAYS, n_files=N_FILES,
+                                    cache_tb=20.0)], n)
+
+
+def _key(res) -> List:
+    return [(r.spec, r.metrics, r.storage_usd, r.network_usd, r.ops_usd)
+            for r in res.results]
+
+
+def _fleet(specs, workers: int):
+    t0 = time.perf_counter()
+    res = run_sweep(specs, backend="jax", tick=JAX_BENCH_TICK,
+                    lane_chunk=FLEET_CHUNK, transport="subprocess",
+                    workers=workers)
+    wall = time.perf_counter() - t0
+    if not res.ok:
+        raise RuntimeError(f"fleet sweep lost {len(res.failures)} job(s)")
+    return res, wall
+
+
+def _label(n: int) -> str:
+    return "10klane" if n == 10_000 else f"{n}lane"
+
+
+def run(fast: bool = False, parity: bool = True) -> List[Dict]:
+    panel = [64] if fast else [1024, 10_000]
+    worker_axis = [2] if fast else [1, 4]
+    rows: List[Dict] = []
+    largest_fleet = None
+    for n in panel:
+        specs = _lane_specs(n)
+        by_workers: Dict[int, float] = {}
+        for w in worker_axis:
+            res, wall = _fleet(specs, w)
+            lps = n / wall if wall > 0 else 0.0
+            by_workers[w] = lps
+            rows.append({"name": f"sweep.jax.lane_scaling.{_label(n)}.w{w}",
+                         "us_per_call": wall / n * 1e6,
+                         "derived": lps})
+            largest_fleet = (specs, res)
+        if len(worker_axis) > 1:
+            w_lo, w_hi = min(worker_axis), max(worker_axis)
+            rows.append({"name": f"sweep.jax.fleet_speedup.{_label(n)}",
+                         "us_per_call": 0.0,
+                         "derived": by_workers[w_hi] / by_workers[w_lo]
+                         if by_workers[w_lo] > 0 else 0.0})
+    if parity and largest_fleet is not None:
+        # Acceptance gate: the fleet result must be byte-identical to the
+        # serial in-process registry path over the same lane-chunk jobs.
+        specs, fleet_res = largest_fleet
+        from repro.sim.jobs import RetryPolicy
+
+        t0 = time.perf_counter()
+        serial = run_sweep(specs, backend="jax", tick=JAX_BENCH_TICK,
+                           lane_chunk=FLEET_CHUNK, retry=RetryPolicy())
+        wall = time.perf_counter() - t0
+        if _key(serial) != _key(fleet_res):
+            raise RuntimeError(
+                f"fleet result diverged from the serial registry path on "
+                f"the {_label(len(specs))} grid")
+        rows.append({"name": f"sweep.jax.fleet_parity.{_label(len(specs))}",
+                     "us_per_call": wall / len(specs) * 1e6,
+                     "derived": 1.0})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="64-lane / 2-worker smoke panel")
+    ap.add_argument("--no-parity", action="store_true",
+                    help="skip the serial-registry bitwise gate")
+    ap.add_argument("--json", default="",
+                    help="also write rows as a bench JSON document")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows = run(fast=args.fast, parity=not args.no_parity)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g}",
+              flush=True)
+    if args.json:
+        doc = {"wall_s": time.time() - t0, "fast": args.fast,
+               "failures": [],
+               "benches": [{"name": r["name"],
+                            "us_per_call": float(r["us_per_call"]),
+                            "derived": float(r["derived"])} for r in rows]}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {args.json} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

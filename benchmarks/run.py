@@ -9,6 +9,9 @@ columns where the paper provides reference values).
   hotloop  bench_tick_engine  (transfer-manager tick engines)
   sweep    bench_sweep        (scenario-sweep engine: process configs/sec
                                + batched-backend lanes/sec)
+  fleet    bench_fleet        (worker-fleet lane scaling: 1024/10k-lane
+                               grids across a workers axis + bitwise
+                               parity gate vs the serial registry path)
   roofline bench_roofline     (dry-run roofline terms per cell)
 
 Env knobs: HCDC_RUNS (default 1), HCDC_DAYS (90), HCDC_FILES (1e6),
@@ -112,6 +115,16 @@ def main() -> int:
         return rows
 
     section("sweep", sweep)
+
+    def fleet():
+        from benchmarks import bench_fleet
+        rows = bench_fleet.run(fast=fast)
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']:.4g}",
+                  flush=True)
+        return rows
+
+    section("fleet", fleet)
 
     def roofline():
         from benchmarks import bench_roofline

@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Documentation link-integrity checker (docs/README.md).
+
+Scans the repo's markdown (README.md, ROADMAP.md, CHANGES.md, PAPER.md,
+docs/**/*.md by default, or explicit paths given as arguments) and fails
+on any *relative* link whose target does not exist in the working tree:
+
+    python scripts/check_docs.py            # exit 0 = no broken links
+    python scripts/check_docs.py docs/*.md  # check a subset
+
+Checked: inline links/images ``[text](target)`` whose target is not a
+URL (has no scheme) and not a pure in-page anchor (``#section``).
+Targets are resolved relative to the file containing the link; a
+``#fragment`` suffix is stripped before the existence check (fragments
+themselves are not validated — headings move too often for that to stay
+signal). Absolute paths (``/root/...``) are rejected outright: docs must
+stay relocatable, so links out of the repo are broken by definition.
+
+CI runs this in the lint job next to ruff; locally it is wired into
+``make lint``. Exit codes: 0 clean, 1 broken links (each printed as
+``file:line: broken link 'target'``), 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Default scan set: top-level markdown plus everything under docs/.
+DEFAULT_GLOBS = ("*.md", "docs/**/*.md")
+
+#: Inline markdown link/image: ``[text](target)`` / ``![alt](target)``.
+#: The target group stops at the first unescaped ')' or whitespace-title
+#: boundary, which covers this repo's plain-target house style.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+#: Anything with a scheme (https:, mailto:, ...) is out of scope.
+_SCHEME = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def iter_links(path: str) -> Iterator[Tuple[int, str]]:
+    """Yield ``(line_number, target)`` for every inline link in *path*.
+
+    Fenced code blocks are skipped: bench tables and shell transcripts
+    routinely contain ``[...]``-shaped text that is not a link.
+    """
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK.finditer(line):
+                yield lineno, m.group(1)
+
+
+def check_file(path: str) -> List[str]:
+    """Return ``file:line: broken link`` messages for *path*."""
+    problems: List[str] = []
+    base = os.path.dirname(os.path.abspath(path))
+    rel = os.path.relpath(path, REPO_ROOT)
+    for lineno, target in iter_links(path):
+        if _SCHEME.match(target) or target.startswith("#"):
+            continue
+        bare = target.split("#", 1)[0]
+        if not bare:
+            continue
+        if os.path.isabs(bare):
+            problems.append(f"{rel}:{lineno}: absolute-path link "
+                            f"'{target}' (use a repo-relative link)")
+            continue
+        if not os.path.exists(os.path.join(base, bare)):
+            problems.append(f"{rel}:{lineno}: broken link '{target}'")
+    return problems
+
+
+def default_files() -> List[str]:
+    files: List[str] = []
+    for pat in DEFAULT_GLOBS:
+        files.extend(glob.glob(os.path.join(REPO_ROOT, pat), recursive=True))
+    return sorted(set(files))
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="markdown files to check (default: repo-level "
+                         "*.md plus docs/**/*.md)")
+    args = ap.parse_args(argv)
+
+    files = args.paths or default_files()
+    missing = [p for p in files if not os.path.isfile(p)]
+    if missing:
+        for p in missing:
+            print(f"check_docs: no such file: {p}", file=sys.stderr)
+        return 2
+
+    problems: List[str] = []
+    for path in files:
+        problems.extend(check_file(path))
+    for msg in problems:
+        print(msg)
+    n = len(files)
+    if problems:
+        print(f"check_docs: {len(problems)} broken link(s) "
+              f"across {n} file(s)", file=sys.stderr)
+        return 1
+    print(f"check_docs: {n} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

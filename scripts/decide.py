@@ -152,6 +152,15 @@ def main(argv=None) -> int:
                          "see docs/simulation.md, 'Kernel selection')")
     ap.add_argument("--lane-chunk", type=int, default=None)
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--transport", default=None,
+                    choices=["subprocess", "local"],
+                    help="run sweep jobs on a persistent worker fleet "
+                         "(repro.sim.runners): 'subprocess' spawns "
+                         "--workers local worker processes, 'local' "
+                         "executes inline (docs/distributed.md)")
+    ap.add_argument("--shard", action="store_true",
+                    help="jax backend: shard_map each lane batch over "
+                         "the local device mesh (docs/distributed.md)")
     ap.add_argument("--cross-check", action="store_true",
                     help="re-evaluate the baseline and final frontier on "
                          "the other backend; non-zero exit on disagreement")
@@ -193,6 +202,9 @@ def main(argv=None) -> int:
     if args.tick_impl != "auto" and args.backend != "jax":
         log.error("--tick-impl requires --backend jax")
         return 2
+    if args.shard and args.backend != "jax":
+        log.error("--shard requires --backend jax")
+        return 2
     cache_dir = None if args.no_cache else args.cache_dir
     if args.resume and not cache_dir:
         log.error("--resume needs a result cache (--cache-dir or "
@@ -211,7 +223,8 @@ def main(argv=None) -> int:
                              workers=args.workers, tick_impl=args.tick_impl,
                              lane_chunk=args.lane_chunk, cache=cache_dir,
                              retry=retry, faults=args.faults,
-                             job_timeout=args.job_timeout)
+                             job_timeout=args.job_timeout,
+                             transport=args.transport, shard=args.shard)
     except ValueError as e:  # malformed --faults plan
         log.error("%s", e)
         return 2

@@ -164,6 +164,21 @@ def main(argv=None) -> int:
                          "unchunked run). Default: all lanes at once")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes (default: all CPUs)")
+    ap.add_argument("--transport", default=None,
+                    choices=["subprocess", "local"],
+                    help="run jobs on a persistent worker fleet "
+                         "(repro.sim.runners) instead of the anonymous "
+                         "pool: 'subprocess' spawns --workers local "
+                         "worker processes, 'local' executes inline "
+                         "(testing). Works with both backends; composes "
+                         "with --retries/--faults/--job-timeout "
+                         "(docs/distributed.md)")
+    ap.add_argument("--shard", action="store_true",
+                    help="jax backend: run each lane batch as one "
+                         "jax.shard_map program over the local device "
+                         "mesh instead of the per-chunk Python loop "
+                         "(bitwise-identical per lane; needs more than "
+                         "one device to help). See docs/distributed.md")
     ap.add_argument("--cache-dir", default=os.environ.get("REPRO_CACHE_DIR"),
                     metavar="DIR",
                     help="persistent result-cache directory (default: "
@@ -257,6 +272,9 @@ def main(argv=None) -> int:
         log.error("--record-series requires --backend jax "
                   "(use --curves for the process backend)")
         return 2
+    if args.shard and args.backend != "jax":
+        log.error("--shard requires --backend jax")
+        return 2
     if args.backend == "jax":
         chunk = ("" if args.lane_chunk is None
                  else f", lane_chunk={args.lane_chunk}")
@@ -300,7 +318,9 @@ def main(argv=None) -> int:
                                lane_chunk=args.lane_chunk, cache=cache_dir,
                                record_series=args.record_series,
                                retry=retry, faults=args.faults,
-                               job_timeout=args.job_timeout)
+                               job_timeout=args.job_timeout,
+                               transport=args.transport,
+                               shard=args.shard)
     except ValueError as e:  # e.g. non-uniform grid on the jax backend
         log.error("%s", e)
         return 2

@@ -5,9 +5,14 @@
 - :mod:`repro.obs.trace`: span-based tracing emitting Chrome
   trace-event JSON (Perfetto-loadable), with an optional
   ``jax.profiler`` hook.
+- :mod:`repro.obs.logs`: stdlib-``logging`` setup for the CLIs with a
+  per-invocation run id shared with the tracer.
 
-Both modules are jax-free at import time; see ``docs/observability.md``
-for the metric catalogue and trace-span map.
+All modules are jax-free at import time. ``docs/observability.md`` is
+the reference: metric catalogue (including the ``jobs.*`` resilience
+and ``workers.*``/``dispatch.*`` fleet families), trace-span map, and
+the worker snapshot/merge process model that keeps parallel sweeps'
+totals equal to serial runs'.
 """
 
 from repro.obs.logs import setup_logging

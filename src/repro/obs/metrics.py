@@ -8,11 +8,13 @@ is the one sink: a registry of labeled Counters, Gauges, and Histograms
 that every layer increments, exported as Prometheus text exposition
 format (``to_prometheus``) or JSON (``snapshot``/``to_json_dict``).
 
-Process model: ``run_sweep``'s spawned pool workers each carry their own
-process-global registry. Workers return a snapshot *delta* with each
-task result (snapshot then reset), and the parent folds it in with
-``merge`` — counters and histograms add, gauges last-write-wins — so a
-parallel sweep's metrics match a serial run's.
+Process model: ``run_sweep``'s worker processes — spawned pool workers
+and persistent fleet workers (``repro.sim.runners``) alike — each carry
+their own process-global registry. Workers return a snapshot *delta*
+with each task result / result frame (snapshot then reset), and the
+parent folds it in with ``merge`` — counters and histograms add, gauges
+last-write-wins — so a parallel sweep's metrics match a serial run's
+(``docs/observability.md``, "Process model").
 
 The registry is jax-free at import time (stdlib only): it is imported
 from ``repro.kernels.registry``, whose concrete-name resolution must

@@ -17,6 +17,10 @@ enabled and jax is importable it brackets the block with
 ``jax.profiler.start_trace``/``stop_trace`` (TensorBoard/XProf format,
 per-HLO timing on the compiled path); otherwise it is a no-op, so the
 module stays importable — and every caller runnable — without jax.
+
+The span → call-site map lives in ``docs/observability.md``
+("Trace-span map"). Spans are parent-process only: worker processes
+(pool or fleet) ship metrics deltas back, not spans.
 """
 
 from __future__ import annotations

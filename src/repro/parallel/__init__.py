@@ -1,7 +1,9 @@
 """Distribution layer: mesh axes, logical sharding rules, parallel plans."""
 
 from repro.parallel.sharding import (
+    LANES_AXIS,
     ParallelPlan,
+    lane_mesh,
     param_shardings,
     batch_shardings,
     cache_shardings,
@@ -9,7 +11,9 @@ from repro.parallel.sharding import (
 )
 
 __all__ = [
+    "LANES_AXIS",
     "ParallelPlan",
+    "lane_mesh",
     "param_shardings",
     "batch_shardings",
     "cache_shardings",

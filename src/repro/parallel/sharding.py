@@ -18,6 +18,11 @@ Parallelism modes composed here:
 
 A rule maps a param-path suffix to axis names per tensor dim; divisibility
 is checked against the mesh and falls back to replication per-axis.
+
+The sweep backend reuses this module for its (much simpler) device
+layout: ``lane_mesh``/``LANES_AXIS`` build the one-axis ``"lanes"`` mesh
+that ``repro.sim.batched`` shard_maps scenario lanes over
+(``run_sweep(..., shard=True)``; see ``docs/distributed.md``).
 """
 
 from __future__ import annotations
@@ -34,6 +39,37 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.config import ModelConfig
 
 DP_AXES = ("pod", "data")  # flattened data-parallel axes (pod may be absent)
+
+#: Mesh axis name of the sweep backend's scenario-lane dimension
+#: (``repro.sim.batched``: one lane = one scenario; lanes never interact).
+LANES_AXIS = "lanes"
+
+
+def lane_mesh(n_devices: Optional[int] = None,
+              devices: Optional[Any] = None) -> Mesh:
+    """One-axis ``"lanes"`` mesh for the batched sweep backend.
+
+    The sweep's lane dimension is embarrassingly parallel (lanes never
+    interact), so its mesh is the degenerate one-axis case of the
+    model meshes above: ``shard_map`` over ``P("lanes")`` splits the
+    lane batch across devices with no collectives in the program.
+    ``n_devices`` takes the first N local devices (default: all);
+    ``devices`` supplies an explicit device list instead.
+    """
+    if devices is None:
+        devices = jax.local_devices()
+        if n_devices is not None:
+            if n_devices > len(devices):
+                raise ValueError(
+                    f"lane_mesh: {n_devices} devices requested but only "
+                    f"{len(devices)} local devices are visible")
+            devices = devices[:n_devices]
+    elif n_devices is not None and n_devices != len(devices):
+        raise ValueError("pass n_devices or devices, not both")
+    devices = list(devices)
+    if not devices:
+        raise ValueError("lane_mesh needs at least one device")
+    return Mesh(np.array(devices), (LANES_AXIS,))
 
 
 @dataclass(frozen=True)

@@ -34,8 +34,14 @@ Large grids execute in bounded device memory through **lane chunking**
 (``run_sweep(..., lane_chunk=)``): lanes are split into fixed-size chunks
 (the last chunk padded by replication), every chunk reuses one compiled
 program, and chunks round-robin across devices when more than one is
-visible. ``pack_specs`` rounds the K/J job-window shapes up to power-of-
-two buckets so data-dependent shapes stop forcing recompiles.
+visible. ``shard=True`` replaces that Python-loop round-robin with one
+``jax.shard_map`` program over a ``"lanes"`` device mesh
+(``repro.parallel.sharding.lane_mesh``), and ``transport=``/``workers=``
+drain lane-chunk jobs through the persistent worker fleet
+(``repro.sim.runners``) — both bitwise-preserving; see
+``docs/distributed.md``. ``pack_specs`` rounds the K/J job-window
+shapes up to power-of-two buckets so data-dependent shapes stop forcing
+recompiles.
 
 Workloads (``repro.sim.workload``): a spec's access-pattern model
 compiles to a deterministic per-generator-tick rate/popularity schedule
@@ -630,14 +636,13 @@ def _lane_step_fns(S: int, K: int, n_months: int, impl: TickImpl,
     return tick_fn, post_fn
 
 
-@functools.lru_cache(maxsize=16)
-def _grid_program(S: int, K: int, n_months: int, impl_name: str,
-                  record=None):
-    """The jitted lane-vmapped simulation (cached per static shape family,
-    concrete ``tick_impl`` name, and series-capture configuration; XLA
-    additionally retraces per concrete array shape — ``pack_specs``'s
-    K/J power-of-two bucketing and ``lane_chunk`` keep those shapes
-    stable across grids)."""
+def _build_lane_sim(S: int, K: int, n_months: int, impl_name: str,
+                    record=None):
+    """The single-lane simulation function (closure over the static
+    dimensions): 5 shared tick-grid arguments + the 15 ``_LANE_FIELDS``
+    arrays -> the per-lane aggregate dict. ``_grid_program`` vmaps it
+    over the lane axis; ``_shard_program`` additionally shard_maps the
+    vmapped program over a device mesh."""
     tick_fn, post_fn = _lane_step_fns(S, K, n_months,
                                       resolve_tick_impl(impl_name),
                                       record=record)
@@ -698,9 +703,52 @@ def _grid_program(S: int, K: int, n_months: int, impl_name: str,
         return post_fn(final, (sizes, job_fid, job_submit_time, job_tail),
                        horizon)
 
-    lane_axes = (None, None, None, None, None,  # shared tick grid
-                 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)
-    return jax.jit(jax.vmap(lane_sim, in_axes=lane_axes))
+    return lane_sim
+
+
+#: vmap axes of ``lane_sim``: 5 shared tick-grid args + 15 lane arrays.
+_LANE_AXES = (None, None, None, None, None) + (0,) * 15
+
+
+@functools.lru_cache(maxsize=16)
+def _grid_program(S: int, K: int, n_months: int, impl_name: str,
+                  record=None):
+    """The jitted lane-vmapped simulation (cached per static shape family,
+    concrete ``tick_impl`` name, and series-capture configuration; XLA
+    additionally retraces per concrete array shape — ``pack_specs``'s
+    K/J power-of-two bucketing and ``lane_chunk`` keep those shapes
+    stable across grids)."""
+    lane_sim = _build_lane_sim(S, K, n_months, impl_name, record)
+    return jax.jit(jax.vmap(lane_sim, in_axes=_LANE_AXES))
+
+
+@functools.lru_cache(maxsize=16)
+def _shard_program(S: int, K: int, n_months: int, impl_name: str,
+                   record, n_shards: int):
+    """The sharded grid program: ``shard_map`` of the lane-vmapped
+    simulation over a ``n_shards``-device ``"lanes"`` mesh
+    (``repro.parallel.sharding.lane_mesh``).
+
+    Each device runs the identical vmapped per-lane program on its
+    1/``n_shards`` slice of the lane batch — lanes never interact, so
+    there are no collectives and per-lane results are bitwise identical
+    to the unsharded program (asserted in ``tests/test_batched.py``).
+    The lane-axis extent of every lane argument must divide
+    ``n_shards``; callers pad by replicating the last lane, exactly as
+    the chunked path does. The 5 shared tick-grid arguments are
+    replicated to every device."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.parallel.sharding import LANES_AXIS, lane_mesh
+
+    lane_sim = _build_lane_sim(S, K, n_months, impl_name, record)
+    mesh = lane_mesh(n_shards)
+    P = jax.sharding.PartitionSpec
+    in_specs = (P(),) * 5 + (P(LANES_AXIS),) * 15
+    sharded = shard_map(jax.vmap(lane_sim, in_axes=_LANE_AXES),
+                        mesh=mesh, in_specs=in_specs,
+                        out_specs=P(LANES_AXIS))
+    return jax.jit(sharded)
 
 
 #: Per-lane array attributes of ``PackedGrid``, in ``lane_sim`` argument
@@ -714,7 +762,7 @@ _LANE_FIELDS = ("disk_limit", "gcs_enabled", "gcs_limit", "min_migrate_pop",
 def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
                     lane_chunk: Optional[int] = None,
                     devices: Optional[Sequence] = None,
-                    record_series=None):
+                    record_series=None, shard: bool = False):
     """Run a packed grid on device; returns the raw per-lane aggregate dict
     (numpy arrays, lane-leading).
 
@@ -740,46 +788,74 @@ def simulate_packed(grid: "PackedGrid", tick_impl: str = "auto",
     S, 3]`` — at O(T_sample * S) device memory per lane; convert with
     ``series_from_capture``. Capture off traces the exact pre-capture
     program, so those results stay bitwise identical.
+
+    ``shard=True`` replaces the per-chunk Python loop's device
+    round-robin with **one** ``shard_map`` program over a ``"lanes"``
+    device mesh (``repro.parallel.sharding.lane_mesh`` over all local
+    devices): the lane batch is padded to a multiple of the mesh size
+    (replicating the last lane) and each device runs its slice of the
+    same vmapped program — no collectives, so per-lane results stay
+    bitwise identical to the unsharded path. ``lane_chunk`` still
+    bounds memory (each chunk runs sharded, its size rounded up to a
+    mesh multiple); ``devices=`` is the round-robin path's knob and is
+    rejected together with ``shard``.
     """
     impl = resolve_tick_impl(tick_impl)
     record = _normalize_record(record_series, grid.n_ticks)
     if lane_chunk is not None and lane_chunk <= 0:
         raise ValueError(f"lane_chunk must be > 0, got {lane_chunk!r}")
+    if shard and devices is not None:
+        raise ValueError("shard=True builds a lane mesh over the local "
+                         "devices; devices= applies to the round-robin "
+                         "path only")
     devices = list(devices) if devices is not None else jax.local_devices()
     if not devices:
         raise ValueError("devices must be a non-empty sequence")
     L = grid.n_lanes
-    if lane_chunk is None and len(devices) > 1:
+    n_shards = len(devices) if shard else 0
+    if not shard and lane_chunk is None and len(devices) > 1:
         lane_chunk = -(-L // len(devices))  # spread one chunk per device
 
     tracer = get_tracer()
-    program = _grid_program(len(grid.site_names), grid.max_jobs_per_tick,
-                            grid.n_months, impl.name, record)
+    S, K = len(grid.site_names), grid.max_jobs_per_tick
+    if n_shards:
+        program = _shard_program(S, K, grid.n_months, impl.name, record,
+                                 n_shards)
+    else:
+        program = _grid_program(S, K, grid.n_months, impl.name, record)
     T = grid.n_ticks
     shared = (np.asarray(grid.times), np.asarray(grid.dts),
               np.asarray(grid.month_idx), np.arange(T, dtype=np.int32),
               np.float32(grid.horizon))
     lanes = [np.asarray(getattr(grid, name)) for name in _LANE_FIELDS]
 
+    def pad_lanes(chunk, n, C):
+        """Pad a ``n``-lane slice to ``C`` by replicating its last lane
+        (padded results are discarded; lanes never interact)."""
+        if n >= C:
+            return chunk
+        return [np.concatenate([a] + [a[-1:]] * (C - n), axis=0)
+                for a in chunk]
+
     if lane_chunk is None or lane_chunk >= L:
+        C = -(-L // n_shards) * n_shards if n_shards else L
         with tracer.span("simulate_packed", lanes=L, ticks=T,
-                         tick_impl=impl.name, chunks=1):
-            out = program(*shared, *lanes)
-            return {k: np.asarray(v) for k, v in out.items()}
+                         tick_impl=impl.name, chunks=1, shards=n_shards):
+            out = program(*shared, *pad_lanes(lanes, L, C))
+            return {k: np.asarray(v)[:L] for k, v in out.items()}
 
     C = int(lane_chunk)
+    if n_shards:
+        C = -(-C // n_shards) * n_shards  # each chunk shards evenly
     chunk_outs = []
     for ci, start in enumerate(range(0, L, C)):
         stop = min(start + C, L)
-        chunk = [a[start:stop] for a in lanes]
-        if stop - start < C:  # pad by replicating the last real lane
-            pad = C - (stop - start)
-            chunk = [np.concatenate([a] + [a[-1:]] * pad, axis=0)
-                     for a in chunk]
+        chunk = pad_lanes([a[start:stop] for a in lanes], stop - start, C)
         dev = devices[ci % len(devices)]
         with tracer.span("simulate_packed.chunk", chunk=ci,
-                         lanes=stop - start, tick_impl=impl.name):
-            if len(devices) > 1:
+                         lanes=stop - start, tick_impl=impl.name,
+                         shards=n_shards):
+            if len(devices) > 1 and not n_shards:
                 # commit every argument so each chunk dispatches (and can
                 # execute concurrently) on its own device
                 args = [jax.device_put(a, dev)
@@ -897,11 +973,49 @@ def series_from_capture(grid: "PackedGrid", out: Dict[str, np.ndarray],
 #: work, large enough that per-chunk dispatch overhead stays trivial.
 _RESILIENT_LANE_CHUNK = 8
 
+#: Default lane-chunk size on the worker fleet: each chunk pays a frame
+#: round trip, so fleet chunks are bigger than the in-process resilient
+#: default (a lost chunk still re-runs in seconds).
+_FLEET_LANE_CHUNK = 64
+
+
+def lane_chunk_runner(ctx: Dict) -> Callable:
+    """Build the worker-side runner for lane-chunk job payloads.
+
+    ``ctx`` is the fleet init context built by ``_simulate_packed_jobs``:
+    static shapes (``S``/``K``/``n_months``), the *concrete* tick-impl
+    name (resolved in the dispatcher so ``"auto"`` cannot diverge per
+    host), the normalized series-capture config, the shard count (0 =
+    unsharded), and the 5 shared tick-grid arrays — shipped once at
+    init, never per job. Each payload is ``{"chunk": [...15 lane
+    arrays...], "n": valid_lanes}``, already padded to the program's
+    chunk size by the dispatcher; the runner executes the same compiled
+    program the serial path uses and truncates the padding, so fleet
+    results are bitwise identical to serial ones.
+    """
+    impl = resolve_tick_impl(ctx["tick_impl"])
+    n_shards = int(ctx.get("shard", 0))
+    builder_args = (ctx["S"], ctx["K"], ctx["n_months"], impl.name,
+                    ctx["record"])
+    if n_shards:
+        program = _shard_program(*builder_args, n_shards)
+    else:
+        program = _grid_program(*builder_args)
+    shared = tuple(ctx["shared"])
+
+    def run(payload):
+        out = program(*shared, *payload["chunk"])
+        return {k: np.asarray(v)[:payload["n"]] for k, v in out.items()}
+
+    return run
+
 
 def _simulate_packed_jobs(grid: "PackedGrid", *, tick_impl: str,
                           lane_chunk: Optional[int], record_series,
                           faults, retry, job_timeout,
-                          journal: Optional[Callable]):
+                          journal: Optional[Callable],
+                          workers: Optional[int] = None,
+                          transport=None, shard: bool = False):
     """Run a packed grid as retryable lane-chunk jobs.
 
     Each job executes one fixed-size slice of the grid's dynamics lanes
@@ -911,6 +1025,15 @@ def _simulate_packed_jobs(grid: "PackedGrid", *, tick_impl: str,
     chunks are journaled through ``journal`` as they land (checkpointed
     resume); abandoned chunks leave their lanes out of the stitched
     output and are reported via the returned registry.
+
+    ``transport`` engages the worker fleet (``repro.sim.runners``): up
+    to ``workers`` persistent workers each compile the chunk program
+    once (the shared tick-grid arrays ship once in the init context)
+    and are fed per-chunk lane slices — the grid itself never crosses
+    the wire whole. ``shard`` makes every chunk execute as one
+    ``shard_map`` program over the local-device lane mesh (composable
+    with the fleet: the flag rides the init context, so each worker
+    shards over *its* local devices).
 
     Returns ``(out, registry, missing_lanes)`` where ``out`` has the
     ``simulate_packed`` shape (zero-filled for missing lanes — callers
@@ -923,10 +1046,15 @@ def _simulate_packed_jobs(grid: "PackedGrid", *, tick_impl: str,
     if lane_chunk is not None and lane_chunk <= 0:
         raise ValueError(f"lane_chunk must be > 0, got {lane_chunk!r}")
     L = grid.n_lanes
-    C = int(lane_chunk) if lane_chunk is not None else min(
-        L, _RESILIENT_LANE_CHUNK)
-    program = _grid_program(len(grid.site_names), grid.max_jobs_per_tick,
-                            grid.n_months, impl.name, record)
+    if lane_chunk is not None:
+        C = int(lane_chunk)
+    else:
+        C = min(L, _FLEET_LANE_CHUNK if transport is not None
+                else _RESILIENT_LANE_CHUNK)
+    n_shards = len(jax.local_devices()) if shard else 0
+    if n_shards:
+        C = -(-C // n_shards) * n_shards  # chunks shard evenly
+    S, K = len(grid.site_names), grid.max_jobs_per_tick
     T = grid.n_ticks
     shared = (np.asarray(grid.times), np.asarray(grid.dts),
               np.asarray(grid.month_idx), np.arange(T, dtype=np.int32),
@@ -947,17 +1075,13 @@ def _simulate_packed_jobs(grid: "PackedGrid", *, tick_impl: str,
 
     tracer = get_tracer()
 
-    def run_one(job):
-        start, stop = job.payload
+    def slice_chunk(start: int, stop: int):
         chunk = [a[start:stop] for a in lanes]
         if stop - start < C:  # pad by replicating the last real lane
             pad = C - (stop - start)
             chunk = [np.concatenate([a] + [a[-1:]] * pad, axis=0)
                      for a in chunk]
-        with tracer.span("simulate_packed.chunk", chunk=job.job_id,
-                         lanes=stop - start, tick_impl=impl.name):
-            o = program(*shared, *chunk)
-        return {k: np.asarray(v)[:stop - start] for k, v in o.items()}
+        return chunk
 
     on_done = None
     if journal is not None:
@@ -969,8 +1093,39 @@ def _simulate_packed_jobs(grid: "PackedGrid", *, tick_impl: str,
                      for si in spec_of_chunk[(start, stop)]])
 
     policy = retry if retry is not None else joblib.RetryPolicy()
-    chunk_results, registry = joblib.run_local_jobs(
-        jobs_list, run_one, policy=policy, faults=faults, on_done=on_done)
+    if transport is not None:
+        from repro.sim.runners import run_fleet_jobs
+
+        ctx = {"kind": "lanes", "tick_impl": impl.name, "record": record,
+               "S": S, "K": K, "n_months": grid.n_months,
+               "shard": n_shards, "shared": list(shared)}
+
+        def prepare(job):
+            start, stop = job.payload
+            return {"chunk": slice_chunk(start, stop), "n": stop - start}
+
+        with tracer.span("simulate_packed.fleet", lanes=L, chunk=C,
+                         workers=workers or 1, tick_impl=impl.name):
+            chunk_results, registry = run_fleet_jobs(
+                jobs_list, workers=workers or 1, transport=transport,
+                ctx=ctx, prepare=prepare, policy=policy, faults=faults,
+                on_done=on_done)
+    else:
+        runner = lane_chunk_runner(
+            {"kind": "lanes", "tick_impl": impl.name, "record": record,
+             "S": S, "K": K, "n_months": grid.n_months,
+             "shard": n_shards, "shared": list(shared)})
+
+        def run_one(job):
+            start, stop = job.payload
+            with tracer.span("simulate_packed.chunk", chunk=job.job_id,
+                             lanes=stop - start, tick_impl=impl.name):
+                return runner({"chunk": slice_chunk(start, stop),
+                               "n": stop - start})
+
+        chunk_results, registry = joblib.run_local_jobs(
+            jobs_list, run_one, policy=policy, faults=faults,
+            on_done=on_done)
 
     out: Dict[str, np.ndarray] = {}
     done_lanes: set = set()
@@ -996,7 +1151,9 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
                   record_series=None,
                   retry=None, faults=None,
                   job_timeout: Optional[float] = None,
-                  journal: Optional[Callable] = None) -> SweepResult:
+                  journal: Optional[Callable] = None,
+                  workers: Optional[int] = None,
+                  transport=None, shard: bool = False) -> SweepResult:
     """Execute a spec grid as one batched on-device program.
 
     Returns a ``SweepResult`` interchangeable with the process backend's
@@ -1021,16 +1178,24 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
     lanes execute as retryable chunk jobs, completions checkpoint
     through ``journal``, and chunks that exhaust their retries drop
     their specs from the (partial) result, reported in
-    ``SweepResult.failures``. The plain path is untouched when neither
-    ``retry`` nor ``faults`` is given. Multi-device round-robin is not
-    combined with the job path.
+    ``SweepResult.failures``. The plain path is untouched when none of
+    ``retry``/``faults``/``transport`` is given. Multi-device
+    round-robin is not combined with the job path.
+
+    ``transport``/``workers`` drain the lane-chunk jobs through the
+    persistent worker fleet (``repro.sim.runners``; the job path
+    engages automatically). ``shard=True`` runs the lane axis as one
+    ``shard_map`` program over the local-device lane mesh on whichever
+    path executes (see ``simulate_packed``); both knobs preserve
+    bitwise per-lane results.
     """
     from repro.core.scenarios import pack_specs
 
-    resilient = retry is not None or faults is not None
+    resilient = (retry is not None or faults is not None
+                 or transport is not None)
     if resilient and devices is not None:
         raise ValueError("devices round-robin is not supported on the "
-                         "resilient job path (retry/faults)")
+                         "resilient job path (retry/faults/transport)")
     tracer = get_tracer()
     t0 = time.perf_counter()
     with tracer.span("pack_specs", n_specs=len(specs)):
@@ -1041,11 +1206,12 @@ def run_sweep_jax(specs: Sequence["ScenarioSpec"], tick: float = 10.0,
         out, registry, missing = _simulate_packed_jobs(
             grid, tick_impl=tick_impl, lane_chunk=lane_chunk,
             record_series=record_series, faults=faults, retry=retry,
-            job_timeout=job_timeout, journal=journal)
+            job_timeout=job_timeout, journal=journal,
+            workers=workers, transport=transport, shard=shard)
     else:
         out = simulate_packed(grid, tick_impl=tick_impl,
                               lane_chunk=lane_chunk, devices=devices,
-                              record_series=record_series)
+                              record_series=record_series, shard=shard)
     wall = time.perf_counter() - t0
     reg = get_registry()
     reg.inc("sweep.jax.runs", help="Batched JAX sweep invocations")

@@ -17,7 +17,12 @@ runs, through the ``REPRO_FAULTS`` environment variable, e.g.::
 
     REPRO_FAULTS="seed=7,crash=0.2,hang=0.1,transient=0.3,hang_s=0.05"
 
-See ``docs/resilience.md`` for the full injection matrix.
+Every executor honors the same plan: the serial and pool paths consult
+it in-process, and the worker fleet (``repro.sim.runners``,
+``docs/distributed.md``) ships the directive with each job frame so a
+``crash`` kills the real subprocess and a ``hang`` trips the real
+deadline reaper. See ``docs/resilience.md`` for the full injection
+matrix.
 """
 
 from __future__ import annotations

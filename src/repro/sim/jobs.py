@@ -30,8 +30,14 @@ Everything is instrumented through ``repro.obs``: ``jobs.retries`` /
 ``(plan.seed, job_id, attempt)``, so resilience behavior is testable
 deterministically.
 
-The registry is deliberately executor-agnostic — remote-host workers can
-later slot in behind the same state machine (ROADMAP: worker fleet).
+The registry is deliberately executor-agnostic: three executors drain
+it today — ``run_local_jobs`` (serial in-process), ``run_process_jobs``
+(anonymous spawned pool, recycled wholesale on crash), and
+``repro.sim.runners.run_fleet_jobs`` (persistent worker fleet over a
+pluggable transport, with per-worker crash attribution) — all observing
+the same state machine, retry policy, and fault plan, and all producing
+byte-identical results. See ``docs/resilience.md`` for the lifecycle /
+retry / resume semantics and ``docs/distributed.md`` for the fleet.
 """
 
 from __future__ import annotations

@@ -1,0 +1,42 @@
+"""Worker-fleet execution for registry jobs (the throughput half of
+distributed sweep execution; ``docs/distributed.md``).
+
+PR 9's resilience layer (``repro.sim.jobs``) made sweep work retryable
+but still executed it through an in-process loop or an anonymous
+``ProcessPoolExecutor``. This package is the runner/worker split that
+drains the same ``JobRegistry`` through a *persistent* fleet:
+
+- ``transport``: the pluggable seam between the dispatcher and one
+  worker — a framed-pickle message protocol over a byte stream.
+  ``SubprocessTransport`` speaks it to a spawned local worker process;
+  ``LocalTransport`` runs the worker logic inline (tests, debugging);
+  remote-host transports slot in behind the same five-method interface
+  without touching the dispatcher (ROADMAP: remote workers).
+- ``worker``: the worker-side main loop (``python -m
+  repro.sim.runners.worker``) — receives an init context, builds the
+  job runner once (scenario jobs or packed-grid lane chunks), then
+  answers job frames with result frames carrying the worker's metrics
+  snapshot delta.
+- ``fleet``: ``run_fleet_jobs``, the dispatcher — assigns ready
+  registry jobs to idle workers, polls for results, reaps deadline
+  overruns by killing (and later respawning) the offending worker, and
+  attributes a dead pipe to exactly the in-flight job it carried.
+
+The dispatcher preserves every guarantee of the PR 9 executors — retry
+with deterministic backoff, wall-clock deadlines, fault-directive
+injection, per-job completion journaling — while improving on the pool's
+crash story: one job per worker means worker death implicates exactly
+one job, so no innocent work is ever requeued. Telemetry flows through
+``repro.obs`` as ``workers.*`` (fleet lifecycle) and ``dispatch.*``
+(job traffic) series; see ``docs/observability.md``.
+"""
+
+from repro.sim.runners.fleet import run_fleet_jobs
+from repro.sim.runners.transport import (LocalTransport, SubprocessTransport,
+                                         Transport, TransportError,
+                                         resolve_transport)
+
+__all__ = [
+    "LocalTransport", "SubprocessTransport", "Transport", "TransportError",
+    "resolve_transport", "run_fleet_jobs",
+]

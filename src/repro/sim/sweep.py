@@ -298,16 +298,19 @@ class SweepResult:
         atomic_write_text(path, json.dumps(doc, indent=2))
 
 
-def _jobs_engaged(backend: str, retry: Any, faults: Any) -> bool:
+def _jobs_engaged(backend: str, retry: Any, faults: Any,
+                  transport: Any = None) -> bool:
     """Whether this call routes through the ``repro.sim.jobs`` layer.
 
     The process backend always does — crash recovery and partial results
-    cost it nothing. The jax backend engages only when resilience was
-    asked for (``retry``/``faults``): its plain path runs the whole grid
-    as few large device programs, and keeping that path untouched keeps
-    the warm-throughput overhead of this feature at zero.
+    cost it nothing. The jax backend engages only when resilience or
+    fleet execution was asked for (``retry``/``faults``/``transport``):
+    its plain path runs the whole grid as few large device programs, and
+    keeping that path untouched keeps the warm-throughput overhead of
+    this feature at zero.
     """
-    return backend == "process" or retry is not None or faults is not None
+    return (backend == "process" or retry is not None
+            or faults is not None or transport is not None)
 
 
 def _journal_to_cache(cache: Any, backend: str, tick: float,
@@ -352,6 +355,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
               retry: Optional[Any] = None,
               faults: Optional[Any] = None,
               job_timeout: Optional[float] = None,
+              transport: Optional[Any] = None,
+              shard: bool = False,
               _journal: Optional[Callable] = None) -> SweepResult:
     """Execute every spec; results keep the input order.
 
@@ -412,6 +417,20 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
     ``SweepResult.failures``. With ``cache`` set, completions are
     journaled per job, so re-running a killed sweep against the same
     cache recomputes only the unfinished jobs (checkpointed resume).
+
+    ``transport`` (see ``docs/distributed.md``): run the jobs on a
+    persistent worker fleet (``repro.sim.runners``) instead of the
+    serial executor / anonymous pool — ``"subprocess"`` spawns local
+    worker processes, ``"local"`` executes inline (tests), a callable is
+    a custom ``Transport`` factory (the remote-host seam). Works with
+    both backends (the jax backend fans its lane-chunk jobs across the
+    fleet) and composes with ``retry``/``faults``/``job_timeout``.
+
+    ``shard`` (jax backend only): run each lane batch as one
+    ``jax.shard_map`` program over the local device mesh
+    (``repro.parallel.sharding.lane_mesh``) instead of the per-chunk
+    Python loop. Per-lane results stay bitwise identical (lane programs
+    exchange no collectives). Mutually exclusive with ``devices``.
     """
     if backend != "jax" and tick_impl != "auto":
         raise ValueError("tick_impl applies to backend='jax' only")
@@ -419,6 +438,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
         raise ValueError("record_series applies to backend='jax' only "
                          "(the process backend records curves via "
                          "spec.curves)")
+    if shard and backend != "jax":
+        raise ValueError("shard applies to backend='jax' only")
     from repro.sim.faults import as_faults
 
     faults = as_faults(faults)
@@ -441,7 +462,7 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
             cache = ResultCache(FaultyBackend(cache.backend, faults))
         specs = list(specs)
         t0 = time.perf_counter()
-        engaged = _jobs_engaged(backend, retry, faults)
+        engaged = _jobs_engaged(backend, retry, faults, transport)
         hits = cache.fetch(specs, backend=backend, tick=tick,
                            tick_impl=impl_name)
         miss = [s for s in dict.fromkeys(specs) if s not in hits]
@@ -456,7 +477,8 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
                             lane_chunk=lane_chunk, devices=devices,
                             record_series=record_series,
                             retry=retry, faults=faults,
-                            job_timeout=job_timeout, _journal=journal)
+                            job_timeout=job_timeout, transport=transport,
+                            shard=shard, _journal=journal)
             # Key by result spec, not input order: a partial result has
             # fewer entries than ``miss`` and zip would misalign them.
             computed = {r.spec: r for r in res.results}
@@ -480,7 +502,9 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
                              lane_chunk=lane_chunk, devices=devices,
                              record_series=record_series,
                              retry=retry, faults=faults,
-                             job_timeout=job_timeout, journal=_journal)
+                             job_timeout=job_timeout, workers=workers,
+                             transport=transport, shard=shard,
+                             journal=_journal)
     if lane_chunk is not None or devices is not None:
         raise ValueError("lane_chunk/devices apply to backend='jax' only")
     if backend != "process":
@@ -504,7 +528,15 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: Optional[int] = None,
     if _journal is not None:
         def on_done(job, result):
             _journal([(job.payload, result)])
-    if workers <= 1 or len(unique) <= 1:
+    if transport is not None:
+        from repro.sim.runners import run_fleet_jobs
+
+        _res, registry = run_fleet_jobs(
+            jobs_list, workers=max(1, min(workers, len(unique))),
+            transport=transport, ctx={"kind": "scenario"},
+            policy=policy, faults=faults,
+            progress=progress, on_done=on_done)
+    elif workers <= 1 or len(unique) <= 1:
         def run_one(job):
             return run_scenario(job.payload)
 
@@ -569,11 +601,15 @@ class SweepDriver:
                  record_series=None,
                  retry: Optional[Any] = None,
                  faults: Optional[Any] = None,
-                 job_timeout: Optional[float] = None):
+                 job_timeout: Optional[float] = None,
+                 transport: Optional[Any] = None,
+                 shard: bool = False):
         if backend != "jax" and tick_impl != "auto":
             raise ValueError("tick_impl applies to backend='jax' only")
         if backend != "jax" and record_series not in (None, False):
             raise ValueError("record_series applies to backend='jax' only")
+        if shard and backend != "jax":
+            raise ValueError("shard applies to backend='jax' only")
         from repro.sim.faults import as_faults
 
         self.backend = backend
@@ -590,6 +626,8 @@ class SweepDriver:
         self.retry = retry
         self.faults = as_faults(faults)
         self.job_timeout = job_timeout
+        self.transport = transport
+        self.shard = shard
         if cache is not None:
             from repro.sim.cache import as_cache  # deferred: imports us
 
@@ -643,7 +681,8 @@ class SweepDriver:
         lanes_before = len(self._lane_keys)
         round_failures: List[Any] = []
         if new:
-            engaged = _jobs_engaged(self.backend, self.retry, self.faults)
+            engaged = _jobs_engaged(self.backend, self.retry, self.faults,
+                                    self.transport)
             journal = None
             if self.cache is not None and engaged:
                 journal = _journal_to_cache(self.cache, self.backend,
@@ -658,6 +697,7 @@ class SweepDriver:
                             record_series=self.record_series,
                             retry=self.retry, faults=self.faults,
                             job_timeout=self.job_timeout,
+                            transport=self.transport, shard=self.shard,
                             _journal=journal)
             self.sweep_calls += 1
             self.configs_run += len(res.results)

@@ -170,6 +170,38 @@ def test_bucket_padding_bitwise_unchanged():
                                           err_msg=key)
 
 
+def test_shard_map_bitwise_identical():
+    """``shard=True`` (ISSUE 10) runs each lane batch as one
+    ``jax.shard_map`` program over the local device mesh; lane programs
+    exchange no collectives, so per-lane results — including lanes
+    replicated to pad the batch to a mesh multiple — must be *bitwise*
+    identical to the per-chunk Python loop."""
+    specs = expand_grid({
+        "base": "III", "cache_tb": [10.0, 15.0, 20.0], "seed": 7, **TINY,
+    })
+    grid = pack_specs(specs, tick=60.0)
+    plain = simulate_packed(grid)
+    sharded = simulate_packed(grid, shard=True)
+    assert set(plain) == set(sharded)
+    for key in plain:
+        np.testing.assert_array_equal(plain[key], sharded[key],
+                                      err_msg=key)
+    # chunked + sharded: chunk size rounds up to a mesh multiple
+    chunked = simulate_packed(grid, lane_chunk=2, shard=True)
+    for key in plain:
+        np.testing.assert_array_equal(plain[key], chunked[key],
+                                      err_msg=key)
+
+
+def test_shard_excludes_devices_round_robin():
+    import jax
+
+    spec = ScenarioSpec(**TINY)
+    grid = pack_specs([spec], tick=60.0)
+    with pytest.raises(ValueError, match="shard"):
+        simulate_packed(grid, shard=True, devices=jax.devices())
+
+
 def test_lane_chunk_knob_validation():
     with pytest.raises(ValueError, match="lane_chunk"):
         run_sweep([ScenarioSpec(**TINY)], backend="jax", lane_chunk=0)

@@ -1,0 +1,262 @@
+"""Worker-fleet execution tests (``repro.sim.runners``): the frame
+protocol, transport resolution, fleet dispatch through local and
+subprocess transports, crash/hang/transient injection, worker
+metrics-snapshot merging, and bitwise parity with the serial executors
+on both backends.
+
+The determinism assertions mirror ``tests/test_jobs.py``: every
+fault-injected fleet run must converge to the byte-identical result of
+its fault-free serial counterpart, because retries re-execute the same
+pure function. The subprocess tests spawn real worker processes at a
+tiny scenario scale; the jax-grid-over-subprocess parity test pays a
+worker-side jax import + compile and is marked ``slow`` (nightly).
+"""
+
+import io
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.scenarios import expand_grid
+from repro.obs.metrics import get_registry
+from repro.sim.jobs import Job, RetryPolicy
+from repro.sim.runners import (
+    LocalTransport,
+    SubprocessTransport,
+    TransportError,
+    resolve_transport,
+    run_fleet_jobs,
+)
+from repro.sim.runners.transport import recv_frame, send_frame
+from repro.sim.sweep import run_sweep
+
+
+def _grid(n=3, days=0.02, n_files=50):
+    return expand_grid({"base": "III", "days": days, "n_files": n_files,
+                        "cache_tb": [float(5 * (i + 1)) for i in range(n)]})
+
+
+def _key(res):
+    return [(r.spec, r.metrics, r.storage_usd, r.network_usd, r.ops_usd)
+            for r in res.results]
+
+
+# -- frame protocol -----------------------------------------------------------
+
+def test_frame_round_trip():
+    buf = io.BytesIO()
+    msgs = [{"op": "init", "ctx": {"kind": "scenario"}},
+            {"op": "job", "payload": np.arange(7.0), "directive": None},
+            {"op": "stop"}]
+    for m in msgs:
+        send_frame(buf, m)
+    buf.seek(0)
+    got = [recv_frame(buf) for _ in msgs]
+    assert got[0] == msgs[0]
+    np.testing.assert_array_equal(got[1]["payload"], msgs[1]["payload"])
+    assert got[2] == msgs[2]
+    with pytest.raises(EOFError):
+        recv_frame(buf)
+
+
+def test_frame_eof_mid_frame():
+    buf = io.BytesIO()
+    send_frame(buf, {"op": "job", "payload": list(range(100))})
+    truncated = io.BytesIO(buf.getvalue()[:-5])
+    with pytest.raises(EOFError):
+        recv_frame(truncated)
+
+
+def test_resolve_transport():
+    assert resolve_transport(None) is SubprocessTransport
+    assert resolve_transport("subprocess") is SubprocessTransport
+    assert resolve_transport("local") is LocalTransport
+    factory = lambda: LocalTransport()  # noqa: E731
+    assert resolve_transport(factory) is factory
+    with pytest.raises(ValueError, match="unknown transport"):
+        resolve_transport("carrier-pigeon")
+
+
+# -- fleet dispatch, local transport ------------------------------------------
+
+def test_fleet_local_matches_serial():
+    specs = _grid(3)
+    serial = run_sweep(specs, workers=1)
+    fleet = run_sweep(specs, workers=2, transport="local")
+    assert fleet.ok
+    assert _key(fleet) == _key(serial)
+
+
+def test_fleet_local_custom_factory_seam():
+    built = []
+
+    def factory():
+        t = LocalTransport()
+        built.append(t)
+        return t
+
+    specs = _grid(2)
+    serial = run_sweep(specs, workers=1)
+    fleet = run_sweep(specs, workers=2, transport=factory)
+    assert _key(fleet) == _key(serial)
+    assert built  # the custom transport actually carried the jobs
+
+
+def test_fleet_crash_converges_bitwise():
+    specs = _grid(3)
+    baseline = run_sweep(specs, workers=1)
+    res = run_sweep(specs, workers=2, transport="local",
+                    faults="seed=7,crash=0.6")
+    assert res.ok
+    assert _key(res) == _key(baseline)
+
+
+def test_fleet_transient_converges_bitwise():
+    specs = _grid(3)
+    baseline = run_sweep(specs, workers=1)
+    res = run_sweep(specs, workers=2, transport="local",
+                    faults="seed=3,transient=0.6")
+    assert res.ok
+    assert _key(res) == _key(baseline)
+
+
+def test_fleet_hang_times_out_and_converges():
+    specs = _grid(2)
+    baseline = run_sweep(specs, workers=1)
+    get_registry().reset()
+    res = run_sweep(specs, workers=2, transport="local",
+                    faults="seed=5,hang=0.9,hang_s=0.5", job_timeout=0.1)
+    assert res.ok
+    assert _key(res) == _key(baseline)
+    assert get_registry().value("jobs.timeouts") >= 1
+
+
+def test_fleet_exhausted_retries_partial_not_fatal():
+    specs = _grid(2)
+    res = run_sweep(specs, workers=2, transport="local",
+                    faults="seed=11,crash=1.0,attempts=99",
+                    retry=RetryPolicy(max_attempts=2, base_delay_s=0.01))
+    assert not res.ok
+    assert len(res.results) == 0
+    assert all(f.kind == "crash" and f.attempts == 2 for f in res.failures)
+
+
+def test_fleet_spawn_failure_abandons_instead_of_spinning():
+    def broken_factory():
+        raise OSError("no more processes")
+
+    jobs = [Job(job_id=f"j{i}", payload=i) for i in range(3)]
+    get_registry().reset()
+    results, reg = run_fleet_jobs(jobs, workers=2, transport=broken_factory)
+    assert results == {}
+    failures = reg.failures()
+    assert len(failures) == 3
+    assert all("no fleet worker" in f.errors[-1] for f in failures)
+    assert get_registry().value("workers.spawn_failures") >= 1
+
+
+def test_fleet_send_failure_requeues_blamelessly():
+    class FlakyPipe(LocalTransport):
+        sends = 0
+
+        def send(self, msg):
+            if msg.get("op") == "job":
+                FlakyPipe.sends += 1
+                if FlakyPipe.sends == 1:  # first dispatch: dead channel
+                    self._alive = False
+                    raise TransportError("pipe burst")
+            super().send(msg)
+
+    jobs = [Job(job_id=f"j{i}", payload=i, labels=(f"j{i}",))
+            for i in range(2)]
+    ctx = {"kind": "scenario"}  # runner unused: payloads are ints
+    results, reg = run_fleet_jobs(
+        jobs, workers=1, transport=FlakyPipe, ctx=ctx,
+        prepare=lambda job: _grid(1)[0])
+    assert len(results) == 2
+    # The lost send was requeued without charging an attempt.
+    assert all(j.attempts == 1 for j in reg.jobs.values())
+
+
+def test_fleet_workers_validation():
+    with pytest.raises(ValueError, match="workers must be >= 1"):
+        run_fleet_jobs([], workers=0, transport="local")
+
+
+def test_run_sweep_shard_requires_jax_backend():
+    with pytest.raises(ValueError, match="backend='jax' only"):
+        run_sweep(_grid(1), backend="process", shard=True)
+
+
+# -- fleet dispatch, subprocess transport -------------------------------------
+
+def test_fleet_subprocess_matches_serial_and_merges_metrics():
+    specs = _grid(3)
+    serial = run_sweep(specs, workers=1)
+    get_registry().reset()
+    fleet = run_sweep(specs, workers=2, transport="subprocess")
+    assert fleet.ok
+    assert _key(fleet) == _key(serial)
+    reg = get_registry()
+    # Worker-side counters arrived via result-frame snapshot merge.
+    assert reg.value("scenario.runs") == len(specs)
+    assert reg.value("dispatch.results") == len(specs)
+    assert reg.value("workers.spawned") >= 1
+
+
+def test_fleet_subprocess_crash_mid_job_merges_survivor_metrics():
+    specs = _grid(3)
+    serial = run_sweep(specs, workers=1)
+    get_registry().reset()
+    res = run_sweep(specs, workers=2, transport="subprocess",
+                    faults="seed=7,crash=0.5")
+    assert res.ok
+    assert _key(res) == _key(serial)
+    reg = get_registry()
+    assert reg.value("jobs.crashes") >= 1
+    assert reg.value("workers.lost") >= 1
+    # The crashed attempt died before reporting; every *successful*
+    # attempt's snapshot still merged, so the fleet total matches a
+    # serial run despite the mid-job worker loss.
+    assert reg.value("scenario.runs") == len(specs)
+
+
+# -- jax lane-chunk jobs over the fleet ---------------------------------------
+
+def _jax_specs(n_seeds=4):
+    return expand_grid({"base": "III", "days": 0.02, "n_files": 50,
+                        "seed": list(range(n_seeds))})
+
+
+def test_fleet_jax_local_bitwise_parity():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    specs = _jax_specs()
+    plain = run_sweep(specs, backend="jax", tick=60.0)
+    fleet = run_sweep(specs, backend="jax", tick=60.0, transport="local",
+                      workers=1, lane_chunk=2)
+    assert fleet.ok
+    assert _key(fleet) == _key(plain)
+
+
+def test_simulate_shard_map_bitwise_parity():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    specs = _jax_specs()
+    plain = run_sweep(specs, backend="jax", tick=60.0)
+    shard = run_sweep(specs, backend="jax", tick=60.0, shard=True)
+    assert _key(shard) == _key(plain)
+    # lane count not divisible by the mesh still pads + truncates right
+    shard_chunk = run_sweep(specs, backend="jax", tick=60.0, shard=True,
+                            lane_chunk=3)
+    assert _key(shard_chunk) == _key(plain)
+
+
+@pytest.mark.slow
+def test_fleet_jax_subprocess_bitwise_parity():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    specs = _jax_specs(6)
+    plain = run_sweep(specs, backend="jax", tick=60.0)
+    fleet = run_sweep(specs, backend="jax", tick=60.0,
+                      transport="subprocess", workers=2, lane_chunk=2)
+    assert fleet.ok
+    assert _key(fleet) == _key(plain)

@@ -313,3 +313,32 @@ def test_sweep_result_ok_and_failures_serialization(tmp_path):
     clean = tmp_path / "complete.json"
     complete.to_json(str(clean))
     assert "failures" not in json.loads(clean.read_text())
+
+
+def test_sweep_result_failures_block_round_trips(tmp_path):
+    """The exported failures block carries every ``JobFailure`` field
+    losslessly: a report consumer can rebuild the exact loss records
+    from the JSON document alone."""
+    import json
+
+    from repro.sim.jobs import JobFailure
+
+    spec = ScenarioSpec(base="III", cache_tb=10.0, **TINY)
+    res = run_scenario(spec)
+    failures = [
+        JobFailure(job_id="spec0001", labels=(spec.label,), kind="crash",
+                   attempts=3,
+                   errors=["attempt 2 [crash]: worker died",
+                           "attempt 3 [crash]: worker died (channel EOF)"]),
+        JobFailure(job_id="lanes0004", labels=("a", "b"), kind="timeout",
+                   attempts=1, errors=["attempt 1 [timeout]: deadline"]),
+    ]
+    out = tmp_path / "partial.json"
+    SweepResult(results=[res], wall_s=1.0,
+                failures=failures).to_json(str(out))
+    doc = json.loads(out.read_text())
+    restored = [JobFailure(job_id=d["job_id"], labels=tuple(d["labels"]),
+                           kind=d["kind"], attempts=d["attempts"],
+                           errors=list(d["errors"]))
+                for d in doc["failures"]]
+    assert restored == failures
